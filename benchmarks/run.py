@@ -1,0 +1,54 @@
+"""Benchmark orchestrator: one entry per paper table/figure + the system
+benches.  ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+
+Prints ``name,us_per_call,derived`` style CSV blocks per bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="scheduling benches with fewer requests")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "scheduling", "kernels", "roofline",
+                             "ablations"])
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.only in (None, "scheduling"):
+        print("== scheduling benchmarks (paper Figs. 3-13) ==")
+        from benchmarks import bench_scheduling
+        if args.quick:
+            bench_scheduling.DEFAULTS["n_requests"] = 200
+        try:
+            bench_scheduling.main()
+        except FileNotFoundError as e:
+            print(f"SKIP scheduling: {e}", file=sys.stderr)
+    if args.only in (None, "kernels"):
+        print("== kernel microbenchmarks ==")
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+    if args.only in (None, "ablations"):
+        print("== scheduler ablations (beyond paper) ==")
+        from benchmarks import bench_ablations
+        try:
+            bench_ablations.main()
+        except FileNotFoundError as e:
+            print(f"SKIP ablations: {e}", file=sys.stderr)
+    if args.only in (None, "roofline"):
+        print("== roofline table (from dry-run artifacts) ==")
+        from benchmarks import bench_roofline
+        try:
+            bench_roofline.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"SKIP roofline: {e}", file=sys.stderr)
+    print(f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    all_arch_ids,
+    get_config,
+    register,
+)
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+__all__ = [
+    "ARCH_IDS", "MLAConfig", "MoEConfig", "ModelConfig", "all_arch_ids",
+    "get_config", "register", "SHAPES", "InputShape", "get_shape",
+]

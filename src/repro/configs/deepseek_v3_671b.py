@@ -1,0 +1,31 @@
+"""DeepSeek-V3 (671B MoE: MLA, 1 shared + 256 routed top-8, MTP).
+[arXiv:2412.19437]
+
+Assignment lists d_ff=2048 = the *routed expert* intermediate size, honored in
+MoEConfig.d_ff_expert.  The first 3 layers are dense with the model's dense
+intermediate size 18432 (paper Table 1).
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    source="[arXiv:2412.19437]",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,        # MLA: latent KV, heads materialized per-query
+    head_dim=128,
+    d_ff=18432,              # dense layers (first 3)
+    vocab_size=129280,
+    period=("attn",),
+    attention="mla",
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    ffn_type="swiglu",
+    moe=MoEConfig(num_experts=256, top_k=8, d_ff_expert=2048,
+                  num_shared_experts=1, moe_every=1, moe_offset=0,
+                  first_dense_layers=3),
+    mtp=True,                # one-depth multi-token-prediction head
+    rope_theta=1e4,
+))

@@ -1,0 +1,21 @@
+"""Gemma-3 4B (dense, 5 local(sliding-window 1024) : 1 global, 128k ctx).
+[hf:google/gemma-3-1b-pt]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-4b",
+    arch_type="dense",
+    source="[hf:google/gemma-3-1b-pt]",
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,          # GQA
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    period=("attn_local",) * 5 + ("attn",),   # 5:1 local:global
+    sliding_window=1024,
+    ffn_type="swiglu",
+    qk_norm=True,
+    rope_theta=1e6,
+))

@@ -1,0 +1,25 @@
+"""Jamba-1.5-Large (398B hybrid: Mamba + attention 7:1, MoE 16e top-2 every 2).
+[arXiv:2403.19887]"""
+from repro.configs.base import MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    source="[arXiv:2403.19887]",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,          # GQA on the attention layers
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    # 8-layer Jamba period: attention at position 4, Mamba elsewhere (1:7)
+    period=("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba"),
+    ffn_type="swiglu",
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=24576,
+                  moe_every=2, moe_offset=1),
+    ssm_d_state=16,
+    ssm_expand=2,
+    ssm_d_conv=4,
+    rope_theta=1e4,
+))

@@ -1,0 +1,26 @@
+"""Kimi K2 (1T total / 32B active MoE, 384 experts top-8, GQA).
+[arXiv:2501.kimi2]
+
+Assignment lists d_ff=2048 = routed-expert intermediate size (MoEConfig);
+the single leading dense layer uses the dense intermediate 18432.
+"""
+from repro.configs.base import MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    source="[arXiv:2501.kimi2]",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,          # GQA (Kimi K2 reduces heads vs DeepSeek-V3)
+    head_dim=128,
+    d_ff=18432,              # dense layer(s)
+    vocab_size=163840,
+    period=("attn",),
+    ffn_type="swiglu",
+    moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048,
+                  num_shared_experts=1, moe_every=1, moe_offset=0,
+                  first_dense_layers=1),
+    rope_theta=5e4,
+))

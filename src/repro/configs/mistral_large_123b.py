@@ -1,0 +1,18 @@
+"""Mistral Large 2 (123B dense). [hf:mistralai/Mistral-Large-Instruct-2407]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mistral-large-123b",
+    arch_type="dense",
+    source="[hf:mistralai/Mistral-Large-Instruct-2407]",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,          # GQA
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    period=("attn",),
+    ffn_type="swiglu",
+    rope_theta=1e6,
+))

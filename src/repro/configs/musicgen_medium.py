@@ -1,0 +1,27 @@
+"""MusicGen-medium (decoder-only over EnCodec tokens, 4 codebooks).
+[arXiv:2306.05284]
+
+The EnCodec conv codec is a STUB per the assignment carve-out: inputs are
+codebook token ids (4 parallel streams, delay pattern applied upstream);
+embeddings of the 4 codebooks are summed; each exit head carries 4 parallel
+classifier heads (one per codebook) and confidence is their mean.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    source="[arXiv:2306.05284]",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,         # MHA (kv == q heads)
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,         # per-codebook EnCodec vocabulary
+    period=("attn",),
+    ffn_type="swiglu",
+    rope_theta=1e4,
+    modality="audio_stub",
+    num_codebooks=4,
+))

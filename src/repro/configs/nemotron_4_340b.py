@@ -1,0 +1,18 @@
+"""Nemotron-4 340B (dense, GQA, squared-ReLU FFN). [arXiv:2402.16819]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="nemotron-4-340b",
+    arch_type="dense",
+    source="[arXiv:2402.16819]",
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,          # GQA
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    period=("attn",),
+    ffn_type="relu2",        # squared-ReLU per the Nemotron-4 report
+    rope_theta=1e4,
+))

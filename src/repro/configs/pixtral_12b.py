@@ -1,0 +1,26 @@
+"""Pixtral-12B (VLM: pixtral-ViT frontend STUB + mistral-nemo decoder).
+[hf:mistralai/Pixtral-12B-2409]
+
+Per the assignment carve-out, the vision encoder is a stub: input_specs()
+provides precomputed patch embeddings of shape (batch, num_patches, d_model);
+this config is the language decoder that consumes them.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pixtral-12b",
+    arch_type="vlm",
+    source="[hf:mistralai/Pixtral-12B-2409]",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,          # GQA
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    period=("attn",),
+    ffn_type="swiglu",
+    rope_theta=1e6,
+    modality="vision_stub",
+    num_patches=1024,        # patch-embedding prefix provided by the stub
+))

@@ -1,0 +1,19 @@
+"""Qwen3-4B (dense, GQA, qk-norm). [hf:Qwen/Qwen3-8B]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-4b",
+    arch_type="dense",
+    source="[hf:Qwen/Qwen3-8B]",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,          # GQA
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151936,
+    period=("attn",),
+    ffn_type="swiglu",
+    qk_norm=True,            # per-head RMSNorm on q and k
+    rope_theta=1e6,
+))

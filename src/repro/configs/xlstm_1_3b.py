@@ -1,0 +1,21 @@
+"""xLSTM-1.3B (sLSTM + mLSTM blocks, 7:1 mLSTM:sLSTM). [arXiv:2405.04517]
+
+No FFN sublayer: xLSTM blocks carry their own up/down projections
+(pre-up-projection mLSTM, post-up-projection sLSTM per the paper).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    source="[arXiv:2405.04517]",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,                  # blocks carry their own projections
+    vocab_size=50304,
+    period=("mlstm",) * 7 + ("slstm",),
+    ffn_type="none",
+))

@@ -1,0 +1,175 @@
+"""Discrete-event simulator for the serving system (paper §IV protocol).
+
+Workload model (paper §IV): K concurrent closed-loop clients.  Each client
+has one outstanding request at a time; when it completes (or its deadline
+expires) the client immediately issues the next, with a relative deadline
+drawn from U[D_l, D_u] and a sample drawn from the shuffled test set.
+
+The simulator drives any Policy over per-sample oracle tables
+(confidence[sample, stage], correct[sample, stage]) and profiled stage WCETs.
+Deadline-miss semantics follow the paper: a request fails iff *no* stage
+completed before its deadline; otherwise the last in-time exit's prediction
+is the result.  Scheduler wall time can optionally be charged to the
+simulated clock (overhead experiments, Fig. 13 analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core.task import Task
+
+
+@dataclasses.dataclass
+class Workload:
+    n_clients: int = 20
+    d_lo: float = 0.01
+    d_hi: float = 0.3
+    n_requests: int = 500          # total across clients
+    seed: int = 0
+    mandatory_stages: int = 1
+
+
+@dataclasses.dataclass
+class SimResult:
+    accuracy: float
+    miss_rate: float
+    mean_depth: float
+    mean_conf: float
+    overhead_frac: float
+    n_requests: int
+    per_request: list
+
+    def row(self):
+        return dict(accuracy=self.accuracy, miss_rate=self.miss_rate,
+                    mean_depth=self.mean_depth, overhead=self.overhead_frac)
+
+
+def simulate(policy, workload: Workload, stage_times, conf_table,
+             correct_table, *, charge_overhead: bool = False,
+             dispatch_overhead: float = 0.0) -> SimResult:
+    """stage_times: (L,) profiled WCETs; conf_table/correct_table:
+    (n_samples, L) oracle outputs per test sample per stage."""
+    rng = np.random.default_rng(workload.seed)
+    n_samples, L = conf_table.shape
+    stage_times = tuple(float(x) for x in stage_times)
+
+    sample_order = rng.permutation(n_samples)
+    issued = 0
+
+    def new_task(client, now):
+        nonlocal issued
+        if issued >= workload.n_requests:
+            return None
+        rel = rng.uniform(workload.d_lo, workload.d_hi)
+        t = Task(arrival=now, deadline=now + rel, stage_times=stage_times,
+                 mandatory=workload.mandatory_stages,
+                 sample=int(sample_order[issued % n_samples]), client=client)
+        issued += 1
+        return t
+
+    now = 0.0
+    active: list = []
+    finished: list = []
+    # each client: issue first request at a small random offset
+    events = []  # (time, seq, kind, payload)
+    seq = 0
+    for c in range(workload.n_clients):
+        t0 = float(rng.uniform(0, workload.d_lo))
+        heapq.heappush(events, (t0, seq, "issue", c))
+        seq += 1
+
+    running: Optional[tuple] = None      # (task, finish_time)
+    total_busy = 0.0
+    sched_charged = 0.0
+
+    def retire(task, now):
+        """Move a finished/expired task out of the active set."""
+        active.remove(task)
+        depth = task.executed
+        # count only stages that finished before the deadline — the Task's
+        # executed counter is only advanced for in-time completions below
+        missed = depth == 0
+        correct = (not missed) and bool(correct_table[task.sample, depth - 1])
+        conf = float(conf_table[task.sample, depth - 1]) if depth else 0.0
+        finished.append(dict(tid=task.tid, missed=missed, correct=correct,
+                             depth=depth, conf=conf, client=task.client,
+                             deadline=task.deadline, arrival=task.arrival))
+        heapq.heappush(events, (max(now, task.deadline), -task.tid, "issue",
+                                task.client))
+
+    def charge(dt):
+        nonlocal now, sched_charged
+        sched_charged += dt
+        if charge_overhead:
+            now += dt
+
+    while events or running or any(t.executed < t.assigned_depth
+                                   for t in active):
+        # 1. dispatch if idle
+        if running is None:
+            # expire overdue tasks first
+            for t in list(active):
+                if t.deadline <= now:
+                    retire(t, now)
+            w0 = _wall()
+            nxt = policy.next_task(active, now)
+            charge(_wall() - w0 + (dispatch_overhead if nxt else 0.0))
+            if nxt is not None:
+                dur = nxt.stage_times[nxt.executed]
+                running = (nxt, now + dur)
+                total_busy += dur
+        # 2. advance to next event
+        next_event_t = events[0][0] if events else np.inf
+        finish_t = running[1] if running else np.inf
+        if not np.isfinite(min(next_event_t, finish_t)):
+            break
+        if finish_t <= next_event_t:
+            now = finish_t
+            task, _ = running
+            running = None
+            if task.deadline >= now - 1e-12:
+                task.executed += 1
+                task.confidences.append(
+                    float(conf_table[task.sample, task.executed - 1]))
+                w0 = _wall()
+                policy.on_stage_done(active, task, now)
+                charge(_wall() - w0)
+            if task in active and (task.executed >= task.assigned_depth
+                                   or task.deadline <= now):
+                retire(task, now)
+        else:
+            now = next_event_t
+            _, _, kind, client = heapq.heappop(events)
+            if kind == "issue":
+                t = new_task(client, now)
+                if t is not None:
+                    active.append(t)
+                    w0 = _wall()
+                    policy.on_arrival(active, t, now)
+                    charge(_wall() - w0)
+
+    # drain any still-active tasks (simulation ended)
+    for t in list(active):
+        retire(t, max(now, t.deadline))
+
+    n = len(finished)
+    acc = float(np.mean([f["correct"] for f in finished])) if n else 0.0
+    miss = float(np.mean([f["missed"] for f in finished])) if n else 0.0
+    depth = float(np.mean([f["depth"] for f in finished if not f["missed"]])
+                  ) if n else 0.0
+    conf = float(np.mean([f["conf"] for f in finished if not f["missed"]])
+                 ) if n else 0.0
+    denom = total_busy + policy.sched_time
+    return SimResult(accuracy=acc, miss_rate=miss, mean_depth=depth,
+                     mean_conf=conf,
+                     overhead_frac=policy.sched_time / denom if denom else 0.0,
+                     n_requests=n, per_request=finished)
+
+
+def _wall():
+    import time
+    return time.perf_counter()

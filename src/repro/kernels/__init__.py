@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel subpackage ships kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jitted wrapper), and ref.py (pure-jnp oracle used by the
+per-kernel shape/dtype-sweep allclose tests).  Kernels are validated in
+interpret mode on CPU; on real TPU hardware they are enabled via
+ParallelCtx/use flags (this container has no TPU).
+"""

@@ -1,0 +1,111 @@
+"""Pallas TPU flash-decode kernel: one query token vs. a (ring) KV cache.
+
+Grid: (batch * q_heads, n_kv_blocks) with the kv axis innermost; running
+(m, l, acc) scratch implements the online softmax.  Slot validity uses the
+cache's slot_pos array (ring caches store non-monotonic positions), matching
+repro.models.flash_decode's per-shard partial — this kernel is the
+*intra-shard* compute of the distributed flash-decode: on a real pod each
+model-parallel shard runs this kernel over its local cache slice and the
+(m, l) combine crosses shards via psum/pmax.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, sp_ref, cp_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, softmax_scale, window,
+                   block_k, n_kv_blocks):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                # (1, dh)
+    k = k_ref[0].astype(jnp.float32)                # (bk, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * softmax_scale                           # (1, bk)
+    slot_pos = sp_ref[0]                            # (bk,)
+    cur = cp_ref[0]
+    valid = (slot_pos >= 0) & (slot_pos <= cur)
+    if window is not None:
+        valid &= cur - slot_pos < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=None,
+                     softmax_scale=None, block_k: int = 256,
+                     interpret: bool = True):
+    """q: (B, H, dh); caches: (B, KV, S, dh); slot_pos: (B, S); cur_pos: (B,).
+
+    Returns (B, H, dh).
+    """
+    B, H, dh = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else dh ** -0.5
+    block_k = min(block_k, S)
+    Sp = -(-S // block_k) * block_k
+    if Sp != S:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        slot_pos = jnp.pad(slot_pos, ((0, 0), (0, Sp - S)),
+                           constant_values=-1)
+    nk = Sp // block_k
+
+    kernel = functools.partial(_decode_kernel, softmax_scale=scale,
+                               window=window, block_k=block_k,
+                               n_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bh, ik: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, ik, G=G, KV=KV, H=H:
+                         ((bh // H) * KV + (bh % H) // G, ik, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, ik, G=G, KV=KV, H=H:
+                         ((bh // H) * KV + (bh % H) // G, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda bh, ik, H=H: (bh // H, ik)),
+            pl.BlockSpec((1,), lambda bh, ik, H=H: (bh // H,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda bh, ik: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B * H, 1, dh),
+      k_cache.reshape(B * KV, Sp, dh),
+      v_cache.reshape(B * KV, Sp, dh),
+      slot_pos, cur_pos)
+    return out.reshape(B, H, dh)

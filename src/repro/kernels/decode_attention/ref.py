@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the decode-attention kernel (mirrors
+repro.models.attention.decode_attend semantics with per-batch slot_pos)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_pos, cur_pos, *,
+                         window=None, softmax_scale=None):
+    """q: (B,H,dh); caches: (B,KV,S,dh); slot_pos: (B,S); cur_pos: (B,)."""
+    B, H, dh = q.shape
+    KV = k_cache.shape[1]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else dh ** -0.5
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window is not None:
+        valid &= cur_pos[:, None] - slot_pos < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.exit_confidence.kernel import exit_confidence
+from repro.kernels.exit_confidence.ops import exit_confidence_op
+from repro.kernels.exit_confidence.ref import exit_confidence_ref
+
+__all__ = ["exit_confidence", "exit_confidence_op", "exit_confidence_ref"]

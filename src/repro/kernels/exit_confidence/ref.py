@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused exit-confidence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exit_confidence_ref(h, scale, w_out, *, eps=1e-6, temperature=1.0):
+    h = h.astype(jnp.float32)
+    hn = h * jax.lax.rsqrt(jnp.mean(jnp.square(h), -1, keepdims=True) + eps)
+    hn = hn * (1.0 + scale.astype(jnp.float32))
+    logits = (hn @ w_out.astype(jnp.float32)) / temperature
+    m = jnp.max(logits, -1)
+    lse = jax.nn.logsumexp(logits, -1)
+    conf = jnp.exp(m - lse)
+    pred = jnp.argmax(logits, -1).astype(jnp.int32)
+    return conf, pred, m, lse

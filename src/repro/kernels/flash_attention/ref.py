@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None,
+                        softmax_scale=None):
+    """q: (B, H, S, dh); k, v: (B, KV, S, dh) -> (B, H, S, dh)."""
+    B, H, S, dh = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else dh ** -0.5
+    qg = q.reshape(B, KV, G, S, dh)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, dh).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk
+from repro.kernels.mlstm_chunk.ops import mlstm_chunk_op
+from repro.kernels.mlstm_chunk.ref import mlstm_chunk_ref
+
+__all__ = ["mlstm_chunk", "mlstm_chunk_op", "mlstm_chunk_ref"]

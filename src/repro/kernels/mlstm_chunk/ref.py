@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: delegates to the model's chunk-parallel formulation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.xlstm import mlstm_chunked
+
+
+def mlstm_chunk_ref(q, k, v, i_pre, f_pre, C0, n0, m0):
+    """Single chunk via repro.models.xlstm.mlstm_chunked (chunk = L).
+
+    Inputs are (B,H,L,*) — transposed to the model's (B,S,H,*) layout.
+    """
+    from repro.models import xlstm as X
+    B, H, L, dh = q.shape
+    t = lambda x: x.transpose(0, 2, 1, *range(3, x.ndim))
+    state = {"C": C0.astype(jnp.float32), "n": n0.astype(jnp.float32),
+             "m": m0.astype(jnp.float32)}
+    old = X.MLSTM_CHUNK
+    X.MLSTM_CHUNK = L
+    try:
+        h, final = X.mlstm_chunked(t(q), t(k), t(v),
+                                   i_pre.transpose(0, 2, 1),
+                                   f_pre.transpose(0, 2, 1), state)
+    finally:
+        X.MLSTM_CHUNK = old
+    return (h.transpose(0, 2, 1, 3), final["C"], final["n"], final["m"])

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the RMSNorm kernel (= repro.models.common.rms_norm)."""
+from repro.models.common import rms_norm
+
+
+def rmsnorm_ref(x, scale, *, eps=1e-6):
+    return rms_norm(x, scale, eps)

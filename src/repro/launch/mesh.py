@@ -1,0 +1,31 @@
+"""Production meshes (assignment-fixed shapes).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run entrypoint (repro.launch.dryrun) sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+everything else (smoke tests, benchmarks) sees the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for in-test lowering (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware model (roofline constants, per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (intra-pod)
+DCN_BW = 25e9                     # B/s (pod axis)
+HBM_BYTES = 16e9                  # v5e HBM capacity

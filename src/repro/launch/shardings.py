@@ -1,0 +1,249 @@
+"""Sharding rules: param/opt/batch/cache pytrees -> NamedSharding.
+
+2-D weight sharding (Megatron TP x FSDP-style DP), required to fit the
+123B–1T configs on 256/512 x 16GB chips:
+
+  column-parallel weights (output dim on TP):   (d_in, d_out) -> (DP, TP)
+  row-parallel weights (input dim on TP):       (d_in, d_out) -> (TP, DP)
+  experts:  E over (DP+TP) when divisible (256-way expert parallelism),
+            else E over TP and d_ff_expert over DP
+  embeddings / exit projections: vocab dim over as many axes as divide it
+
+DP is ('data',) single-pod or ('pod','data') multi-pod; TP is 'model'.
+Every axis assignment is divisibility-checked with graceful fallback to a
+subset of axes (or replication) so any architecture lowers.  Optimizer state
+mirrors parameters (ZeRO comes for free from the 2-D layout).  Decode KV
+caches are sequence-sharded (see repro.models.flash_decode).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# symbolic axis groups resolved against the mesh
+DP, TP, DPTP, FREE = "##dp", "##tp", "##dptp", "##free"
+
+_COL = ("wq", "wk", "wv", "w_up", "w_gate", "in_proj", "W", "wq_a", "wq_b",
+        "wkv_a", "wkv_b", "w_if", "dt_proj", "proj")
+_ROW = ("wo", "w_down", "out_proj", "x_proj")
+_EXPERT = ("we_gate", "we_up", "we_down")
+
+
+def _rule_for(name: str, layout: str = "2d"):
+    """Trailing-dims spec template for a parameter name.
+
+    layout "2d": TP x FSDP-DP (training/prefill — weight gathers amortize
+    over many tokens).  layout "tp": TP-only (decode — per-step weight
+    gathers would dominate single-token activations; §Perf iteration 3)."""
+    dpx = DP if layout == "2d" else None
+    vx = DPTP if layout == "2d" else TP
+    if name in _EXPERT:
+        return (DPTP, FREE, FREE)
+    if name in _COL:
+        return (dpx, TP)
+    if name in _ROW:
+        return (TP, dpx)
+    if name == "conv_w":
+        return (None, TP)
+    if name == "A_log":
+        return (TP, None)
+    if name == "tok":                      # embedding (V, d)
+        return (vx, None)
+    if name == "w_out":                    # exit projection (d, V)
+        return (None, vx)
+    return None
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
+
+
+def _subsets(axes, mesh):
+    """Non-empty subsets of `axes`, largest total parallelism first."""
+    out = []
+    n = len(axes)
+    for mask in range(1, 2 ** n):
+        sub = tuple(a for i, a in enumerate(axes) if mask >> i & 1)
+        size = 1
+        for a in sub:
+            size *= mesh.shape[a]
+        out.append((size, sub))
+    out.sort(key=lambda t: -t[0])
+    return [s for _, s in out] + [()]
+
+
+def _candidates(group, mesh):
+    """Axis tuples to try for a symbolic group, most-parallel first."""
+    dp = _dp_axes(mesh)
+    if group == DP:
+        return _subsets(dp, mesh)
+    if group == TP:
+        return [("model",), ()]
+    if group == DPTP:
+        return _subsets(dp + ("model",), mesh)
+    if group == FREE:
+        return _subsets(dp + ("model",), mesh)
+    return [(group,) if isinstance(group, str) else tuple(group), ()]
+
+
+def _assign(shape, template, mesh):
+    """Resolve a trailing-dims template against concrete dims with
+    divisibility fallback.  Earlier (stacking) dims stay replicated."""
+    nd = len(shape)
+    template = template[-nd:] if len(template) > nd else template
+    pad = (None,) * (nd - len(template))
+    spec = []
+    used: set = set()
+    for dim, group in zip(shape, pad + tuple(template)):
+        if group is None:
+            spec.append(None)
+            continue
+        chosen = None
+        for cand in _candidates(group, mesh):
+            cand = tuple(a for a in cand if a not in used)
+            if not cand:
+                continue
+            size = 1
+            for a in cand:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                chosen = cand
+                break
+        if chosen:
+            used.update(chosen)
+            spec.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def _leaf_name(path):
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+    return None
+
+
+def expert_templates_for(cfg, mesh, dp, moe_impl: str):
+    """Expert sharding templates matching the chosen MoE implementation.
+
+    alltoall: EP over a dp-axis suffix on E, expert-FFN width over TP —
+    exactly the shard_map layout, so no per-layer resharding happens.
+    gather (default): maximally-sharded 2-D layout (DPTP/FREE)."""
+    if moe_impl != "alltoall" or cfg is None or cfg.moe is None:
+        return None
+    from repro.models.moe import alltoall_ep_axes
+    ep = alltoall_ep_axes(cfg, mesh, dp)
+    if not ep:
+        return None
+    fe = cfg.moe.d_ff_expert
+    tp = "model" if fe % mesh.shape["model"] == 0 else None
+    ep_s = ep if len(ep) > 1 else ep[0]
+    return {"we_gate": (ep_s, None, tp), "we_up": (ep_s, None, tp),
+            "we_down": (ep_s, tp, None)}
+
+
+def param_shardings(mesh, params, expert_templates=None, layout="2d"):
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if expert_templates and name in expert_templates:
+            t = expert_templates[name]
+            nd = leaf.ndim
+            spec = (None,) * (nd - len(t)) + tuple(t)
+            return NamedSharding(mesh, P(*spec))
+        rule = _rule_for(name, layout) if name else None
+        if rule is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _assign(leaf.shape, rule, mesh))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def decode_weight_layout(cfg, mesh):
+    """Pick the decode weight layout: TP-only when the dense (non-expert)
+    params fit per-device under ~4GiB, else keep the 2-D layout."""
+    import numpy as np
+    from repro.launch.steps import abstract_params
+    params = abstract_params(cfg)
+    dense = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if _leaf_name(path) in _EXPERT:
+            continue
+        dense += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return "tp" if dense / mesh.shape["model"] <= 4 * 2 ** 30 else "2d"
+
+
+def opt_shardings(mesh, opt_state, expert_templates=None):
+    """AdamW state: mu/nu mirror params; step replicated."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      mu=param_shardings(mesh, opt_state.mu, expert_templates),
+                      nu=param_shardings(mesh, opt_state.nu, expert_templates))
+
+
+def batch_shardings(mesh, batch, dp):
+    """Shard the leading (batch) axis of every leaf over dp axes."""
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        bsz = leaf.shape[0]
+        total = 1
+        for a in dp:
+            total *= mesh.shape[a]
+        ax = dp if total > 1 and bsz % total == 0 else None
+        return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_shardings(mesh, cache, dp, seq_axes):
+    """Decode-cache sharding: KV/latent caches sequence-sharded over
+    seq_axes (dim 1 after batch), recurrent states model-sharded."""
+    bdp = tuple(a for a in dp if a not in seq_axes) or None
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+
+        def setdim(i, ax):
+            if ax is None or i < 0 or i >= len(shape):
+                return
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size > 1 and shape[i] % size == 0:
+                spec[i] = ax if isinstance(ax, tuple) and len(ax) > 1 \
+                    else axes[0]
+
+        if name in ("k", "v"):            # (..., B, S, KV, hd)
+            setdim(len(shape) - 4, bdp)
+            setdim(len(shape) - 3, seq_axes)
+        elif name in ("latent", "k_rope"):  # (..., B, S, dim)
+            setdim(len(shape) - 3, bdp)
+            setdim(len(shape) - 2, seq_axes)
+        elif name == "slot_pos":          # (..., B, S)
+            setdim(len(shape) - 2, bdp)
+            setdim(len(shape) - 1, seq_axes)
+        elif name == "ssm_state":         # (..., B, di, ds)
+            setdim(len(shape) - 3, bdp)
+            setdim(len(shape) - 2, "model")
+        elif name == "conv_state":        # (..., B, dc-1, di)
+            setdim(len(shape) - 3, bdp)
+            setdim(len(shape) - 1, "model")
+        elif name == "C":                 # (..., B, H, dk, dv)
+            setdim(len(shape) - 4, bdp)
+            setdim(len(shape) - 1, "model")
+        elif name in ("n", "m"):          # (..., B, H[, dk])
+            setdim(len(shape) - (3 if name == "n" else 2), bdp)
+        else:
+            # slstm tuple state (B, d) and misc small leaves
+            if len(shape) >= 1:
+                setdim(0, bdp if len(shape) <= 2 else None)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,82 @@
+"""Generic training launcher: any assigned architecture (reduced variant on
+CPU; full variant lowers on the production mesh via dryrun.py).
+
+Trains a reduced config of --arch on the synthetic order-2 Markov LM stream
+with deep supervision over its exit heads; reports per-exit loss, saves a
+checkpoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.training import (AdamW, checkpoint, lm_token_stream,
+                            make_train_step, warmup_cosine)
+
+
+def make_batch_fn(cfg, batch, seq, seed):
+    if cfg.modality == "features":
+        raise SystemExit("use examples/train_multiexit.py for the classifier")
+    gen = lm_token_stream(min(cfg.vocab_size, 4096), seed=seed)
+
+    def get(step):
+        b = gen(batch, seq, step_seed=step)
+        toks = b["inputs"]["tokens"]
+        labels = b["labels"]
+        if cfg.modality == "audio_stub":
+            toks = np.repeat(toks[:, None], cfg.num_codebooks, 1)
+            labels = np.repeat(labels[:, None], cfg.num_codebooks, 1)
+            return {"inputs": {"tokens": toks}, "labels": labels}
+        if cfg.modality == "vision_stub":
+            patches = np.zeros((batch, cfg.num_patches, cfg.d_model),
+                               np.float32)
+            return {"inputs": {"tokens": toks, "patch_embeds": patches},
+                    "labels": labels}
+        return {"inputs": {"tokens": toks}, "labels": labels}
+
+    return get
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    print(f"training {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"stages={cfg.stage_boundaries()}")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=warmup_cosine(args.lr, 10, args.steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    get_batch = make_batch_fn(cfg, args.batch, args.seq, seed=0)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = get_batch(step)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"  step {step:4d} loss={float(m['loss']):.4f} "
+                  f"({time.time()-t0:.0f}s)")
+    if args.save:
+        checkpoint.save(args.save, params, {"arch": cfg.name,
+                                            "steps": args.steps})
+        print("saved", args.save)
+
+
+if __name__ == "__main__":
+    main()

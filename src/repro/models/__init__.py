@@ -1,0 +1,17 @@
+from repro.models.common import ParallelCtx
+from repro.models.model import (
+    ExitsOut,
+    count_params_analytic,
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    stage_forward,
+    stage_layouts,
+)
+
+__all__ = [
+    "ParallelCtx", "ExitsOut", "count_params_analytic", "decode_step",
+    "forward", "init_decode_cache", "init_params", "stage_forward",
+    "stage_layouts",
+]

@@ -1,0 +1,73 @@
+"""Early-exit heads — the imprecise-computation interface of every model.
+
+Each stage ends in a thin classifier (paper Fig. 1): RMSNorm → linear to the
+output vocabulary → softmax.  Its (prediction, confidence) tuple is what the
+RTDeepIoT scheduler consumes; confidence = (optionally temperature-calibrated)
+max-softmax probability [21].
+
+The TPU-target fused version of `confidence_from_logits` (online softmax over
+vocab blocks, never materializing the probability vector) lives in
+repro.kernels.exit_confidence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dense_init, param_dtype, rms_norm, shard
+
+
+def init_exit(cfg, key, dtype=None, shared=False):
+    """Per-stage exit params.  The (large, vocab-sized) output projection is
+    *shared* across stages (paper: exits are "thin" classifiers; sharing the
+    unembedding is the standard anytime-LM construction) — each stage owns
+    only its norm scale.  `shared=True` initializes the shared projection."""
+    kg = KeyGen(key)
+    dt = dtype or param_dtype(cfg)
+    d, V = cfg.d_model, cfg.vocab_size
+    if shared:
+        if cfg.modality == "audio_stub":
+            return {"w_out": dense_init(kg(), (cfg.num_codebooks, d, V), dt)}
+        return {"w_out": dense_init(kg(), (d, V), dt)}
+    return {"ln": jnp.zeros((d,), dt)}
+
+
+def apply_exit(cfg, params, h, *, ctx=None):
+    """h: (B, S, d) -> logits.
+
+    text/vlm:   (B, S, V)     next-token logits
+    audio_stub: (B, S, ncb, V)
+    features:   (B, V)        mean-pooled classification logits
+    """
+    hn = rms_norm(h, params["ln"], cfg.norm_eps)
+    if cfg.modality == "features":
+        # classification readout = cell 0 (the anchor position); mean-pool
+        # dilutes position-routed information
+        hn = hn[:, 0]
+        return hn @ params["w_out"]
+    if cfg.modality == "audio_stub":
+        logits = jnp.einsum("bsd,cdv->bscv", hn, params["w_out"])
+    else:
+        logits = hn @ params["w_out"]
+    if ctx is not None:
+        lead = (ctx.dp,) + (None,) * (logits.ndim - 2)
+        logits = shard(logits, ctx, *lead, ctx.tp)
+    return logits
+
+
+def confidence_from_logits(logits, temperature: float = 1.0):
+    """Max-softmax confidence over the trailing class axis (fp32).
+
+    Pure-jnp oracle for the fused Pallas kernel; audio codebook confidences
+    are averaged.
+    """
+    lg = logits.astype(jnp.float32) / temperature
+    conf = jnp.exp(jnp.max(lg, -1) - jax.nn.logsumexp(lg, -1))
+    # average any remaining non-batch axes (codebooks / positions handled by
+    # callers; this reduces exactly the codebook axis for audio)
+    return conf
+
+
+def exit_prediction(cfg, logits):
+    """argmax class / token id at the last position (serving path)."""
+    return jnp.argmax(logits, axis=-1)

@@ -1,0 +1,43 @@
+"""Dense FFN sublayers: SwiGLU and squared-ReLU (Nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import shard_residual, KeyGen, dense_init, param_dtype, rms_norm, shard
+
+
+def init_ffn(cfg, key, d_ff=None, dtype=None):
+    kg = KeyGen(key)
+    dt = dtype or param_dtype(cfg)
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    down_scale = 0.02 / max(1, cfg.num_layers) ** 0.5
+    p = {"ln": jnp.zeros((d,), dt),
+         "w_up": dense_init(kg(), (d, f), dt),
+         "w_down": dense_init(kg(), (f, d), dt, scale=down_scale)}
+    if cfg.ffn_type == "swiglu":
+        p["w_gate"] = dense_init(kg(), (d, f), dt)
+    return p
+
+
+def ffn_core(cfg, params, h, ctx=None):
+    """The projection stack without norm/residual (shared with MoE experts)."""
+    if cfg.ffn_type == "swiglu":
+        a = jax.nn.silu(h @ params["w_gate"]) * (h @ params["w_up"])
+    elif cfg.ffn_type == "relu2":
+        a = jnp.square(jax.nn.relu(h @ params["w_up"]))
+    else:
+        raise ValueError(cfg.ffn_type)
+    if ctx is not None:
+        lead = (ctx.dp,) + (None,) * (a.ndim - 2)
+        a = shard(a, ctx, *lead, ctx.tp)
+    return a @ params["w_down"]
+
+
+def apply_ffn(cfg, params, x, *, ctx=None):
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    y = ffn_core(cfg, params, h, ctx)
+    if y.ndim == 3:
+        y = shard_residual(y, ctx)
+    return x + y

@@ -1,0 +1,174 @@
+"""Mamba (S6 selective-scan) block, TPU-adapted.
+
+The CUDA reference is a fused shared-memory scan kernel; the TPU-native
+adaptation processes the sequence in chunks: an outer `lax.scan` carries the
+(d_inner, d_state) SSM state across chunk boundaries while each chunk is
+solved in parallel with an associative scan — bounding live memory to
+O(chunk * d_inner * d_state) instead of O(S * d_inner * d_state).
+
+Decode is the O(1) single-step recurrence on the carried state plus a ring of
+the last (d_conv-1) inputs for the causal conv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import shard_residual, KeyGen, dense_init, param_dtype, rms_norm, shard
+
+CHUNK = 256
+
+
+def d_inner_of(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def dt_rank_of(cfg):
+    return max(1, -(-cfg.d_model // 16))
+
+
+def init_mamba(cfg, key, dtype=None):
+    kg = KeyGen(key)
+    dt = dtype or param_dtype(cfg)
+    d = cfg.d_model
+    di, ds, dc = d_inner_of(cfg), cfg.ssm_d_state, cfg.ssm_d_conv
+    dtr = dt_rank_of(cfg)
+    down_scale = 0.02 / max(1, cfg.num_layers) ** 0.5
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "in_proj": dense_init(kg(), (d, 2 * di), dt),
+        "conv_w": dense_init(kg(), (dc, di), dt, scale=0.2),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(kg(), (di, dtr + 2 * ds), dt),
+        "dt_proj": dense_init(kg(), (dtr, di), dt, scale=dtr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(kg(), (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(kg(), (di, d), dt, scale=down_scale),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds. x: (B,S,di); w: (dc,di)."""
+    dc = w.shape[0]
+    out = x * w[-1]
+    for j in range(1, dc):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j or None][:, :x.shape[1]]
+        out = out + shifted * w[-1 - j]
+    return out + b
+
+
+def _ssm_inputs(cfg, params, xz):
+    """Shared by full/step paths. xz: (..., 2*di) pre-activation of in_proj."""
+    di, ds = d_inner_of(cfg), cfg.ssm_d_state
+    dtr = dt_rank_of(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z
+
+
+def _dt_B_C(cfg, params, x):
+    ds = cfg.ssm_d_state
+    dtr = dt_rank_of(cfg)
+    dbc = x @ params["x_proj"]
+    dt_low, B, C = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low.astype(jnp.float32) @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _chunk_scan(a, bx, state0):
+    """Linear recurrence s_t = a_t * s_{t-1} + bx_t over a chunk (parallel).
+
+    a, bx: (L, B, di, ds) fp32; state0: (B, di, ds).  Returns (states, last).
+    """
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_all, b_all = jax.lax.associative_scan(combine, (a, bx), axis=0)
+    states = a_all * state0[None] + b_all
+    return states, states[-1]
+
+
+def mamba_scan_full(cfg, x, dt, B, C, A, state0):
+    """x: (Bb,S,di); dt: (Bb,S,di); B,C: (Bb,S,ds); A: (di,ds) (negative).
+
+    Chunked: outer scan over S/CHUNK chunks, inner associative scan.
+    Returns (y (Bb,S,di), final_state (Bb,di,ds)).
+    """
+    Bb, S, di = x.shape
+    ds = B.shape[-1]
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    def rs(t):  # (Bb,S,...) -> (n, chunk, Bb, ...)
+        return t.reshape(Bb, n, chunk, *t.shape[2:]).transpose(1, 2, 0, *range(3, t.ndim + 1))
+
+    xc, dtc, Bc, Cc = rs(x.astype(jnp.float32)), rs(dt), rs(B), rs(C)
+
+    def body(state, inp):
+        xk, dtk, Bk, Ck = inp                       # (chunk,Bb,...)
+        a = jnp.exp(dtk[..., None] * A)             # (chunk,Bb,di,ds)
+        bx = (dtk * xk)[..., None] * Bk[..., None, :]
+        states, last = _chunk_scan(a, bx, state)
+        yk = jnp.einsum("lbds,lbs->lbd", states, Ck)
+        return last, yk
+
+    final, ys = jax.lax.scan(body, state0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(2, 0, 1, 3).reshape(Bb, S, di)
+    return y, final
+
+
+def apply_mamba_full(cfg, params, x, *, ctx=None, **_):
+    Bb, S, d = x.shape
+    di, ds = d_inner_of(cfg), cfg.ssm_d_state
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    xz = h @ params["in_proj"]
+    if ctx is not None:
+        xz = shard(xz, ctx, ctx.dp, None, ctx.tp)
+    xi, z = _ssm_inputs(cfg, params, xz)
+    xi = _causal_conv(xi, params["conv_w"], params["conv_b"])
+    xi = jax.nn.silu(xi)
+    dt, B, C = _dt_B_C(cfg, params, xi)
+    A = -jnp.exp(params["A_log"])
+    state0 = jnp.zeros((Bb, di, ds), jnp.float32)
+    y, final = mamba_scan_full(cfg, xi, dt, B, C, A, state0)
+    y = (y + params["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    out = shard_residual(out, ctx)
+    # cache for subsequent decode: ssm state + conv tail
+    conv_tail = xz[:, S - (cfg.ssm_d_conv - 1):, :di] if S >= cfg.ssm_d_conv - 1 else None
+    cache = {"ssm_state": final,
+             "conv_state": jax.lax.stop_gradient(
+                 h[:, -(cfg.ssm_d_conv - 1):] @ params["in_proj"][:, :di])}
+    return x + out, cache
+
+
+def apply_mamba_step(cfg, params, x, *, cache, ctx=None, **_):
+    """x: (Bb, d). cache: ssm_state (Bb,di,ds), conv_state (Bb,dc-1,di)."""
+    Bb, d = x.shape
+    di, ds, dc = d_inner_of(cfg), cfg.ssm_d_state, cfg.ssm_d_conv
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    xz = h @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # causal conv over [conv_state ; xi]
+    hist = jnp.concatenate([cache["conv_state"], xi[:, None]], 1)  # (Bb,dc,di)
+    xi_c = jnp.einsum("bcd,cd->bd", hist[:, -dc:], params["conv_w"]) + params["conv_b"]
+    xi_c = jax.nn.silu(xi_c)
+    dt, B, C = _dt_B_C(cfg, params, xi_c)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[..., None] * A)                  # (Bb,di,ds)
+    bx = (dt * xi_c.astype(jnp.float32))[..., None] * B[:, None, :]
+    state = a * cache["ssm_state"] + bx
+    y = jnp.einsum("bds,bs->bd", state, C)
+    y = (y + params["D"] * xi_c.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_cache = dict(cache, ssm_state=state, conv_state=hist[:, 1:])
+    return x + out, new_cache

@@ -1,0 +1,305 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential).  [arXiv:2405.04517]
+
+TPU adaptation: the paper's CUDA mLSTM kernel is replaced by a *chunkwise
+parallel* formulation — an outer `lax.scan` carries the stabilized
+(C, n, m) state across chunks; within a chunk the recurrence is evaluated in
+closed form with masked L×L score matrices (flash-attention-shaped work that
+maps onto the MXU).  The sLSTM hidden-to-hidden nonlinearity is inherently
+sequential; its input projections are hoisted out of the scan so the per-step
+body is only the block-diagonal recurrent matmul.
+
+Stabilization follows the paper: running log-scale m with
+m_t = max(logsigmoid(f̃_t) + m_{t-1}, ĩ_t).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import shard_residual, KeyGen, dense_init, param_dtype, rms_norm, shard
+
+MLSTM_CHUNK = 128
+
+
+def _group_norm(x, scale, n_heads, eps=1e-6):
+    """Per-head group norm over trailing dim split into heads."""
+    *lead, d = x.shape
+    xh = x.reshape(*lead, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(*lead, d) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_d_inner(cfg):
+    return 2 * cfg.d_model
+
+
+def init_mlstm(cfg, key, dtype=None):
+    kg = KeyGen(key)
+    dt = dtype or param_dtype(cfg)
+    d, H = cfg.d_model, cfg.num_heads
+    di = mlstm_d_inner(cfg)
+    down_scale = 0.02 / max(1, cfg.num_layers) ** 0.5
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "w_up": dense_init(kg(), (d, 2 * di), dt),
+        "conv_w": dense_init(kg(), (4, di), dt, scale=0.2),
+        "conv_b": jnp.zeros((di,), dt),
+        # block-diagonal (per-head) q/k/v projections, per the xLSTM paper
+        "wq_head": dense_init(kg(), (H, di // H, di // H), dt),
+        "wk_head": dense_init(kg(), (H, di // H, di // H), dt),
+        "wv_head": dense_init(kg(), (H, di // H, di // H), dt),
+        "w_if": dense_init(kg(), (di, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                 3.0 * jnp.ones((H,), jnp.float32)]),
+        "gn": jnp.zeros((di,), dt),
+        "w_down": dense_init(kg(), (di, d), dt, scale=down_scale),
+    }
+
+
+def _mlstm_qkvif(cfg, params, x_m):
+    """x_m: (B,S,di) conv/silu already applied where needed."""
+    from repro.models.ssm import _causal_conv
+    H = cfg.num_heads
+    di = x_m.shape[-1]
+    dh = di // H
+    x_c = jax.nn.silu(_causal_conv(x_m, params["conv_w"], params["conv_b"]))
+    B, S, _ = x_m.shape
+    xch = x_c.reshape(B, S, H, dh)
+    xmh = x_m.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xch, params["wq_head"])
+    k = jnp.einsum("bshd,hde->bshe", xch, params["wk_head"]) * dh ** -0.5
+    v = jnp.einsum("bshd,hde->bshe", xmh, params["wv_head"])
+    if_pre = (x_c.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)           # (B,S,H)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, state0):
+    """Chunk-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,dh); i_pre,f_pre: (B,S,H) fp32.
+    state0: dict(C=(B,H,dh,dh), n=(B,H,dh), m=(B,H)) — stabilized storage
+    (C and n are already divided by exp(m)).
+    Returns (h (B,S,H,dh), final_state).
+    """
+    B, S, H, dh = q.shape
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0, (S, L)
+    n_chunks = S // L
+
+    def rs(t):  # (B,S,...) -> (n_chunks, B, L, ...)
+        return t.reshape(B, n_chunks, L, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    qs, ks, vs = rs(q), rs(k), rs(v)
+    is_, fs = rs(i_pre), rs(f_pre)
+
+    def body(state, inp):
+        C0, n0, m0 = state["C"], state["n"], state["m"]   # stabilized
+        qc, kc, vc, ic, fc = inp                          # (B,L,H,*)
+        lf = jax.nn.log_sigmoid(fc)                       # (B,L,H)
+        b = jnp.cumsum(lf, axis=1)                        # inclusive
+        u = ic - b                                        # (B,L,H)
+        g = jnp.maximum(m0[:, None], jax.lax.cummax(u, axis=1))
+        m = b + g                                         # (B,L,H) running max
+        # decay matrices
+        scores = jnp.einsum("blhd,bshd->bhls", qc, kc).astype(jnp.float32)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        dmat = jnp.exp(u.transpose(0, 2, 1)[:, :, None, :]
+                       - g.transpose(0, 2, 1)[:, :, :, None])   # (B,H,l,s)
+        dmat = jnp.where(causal[None, None], dmat, 0.0)
+        w = scores * dmat                                  # weighted scores
+        inter_scale = jnp.exp(m0[:, None] - g)             # (B,L,H)
+        h_intra = jnp.einsum("bhls,bshd->blhd", w.astype(vc.dtype), vc)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qc, C0.astype(qc.dtype))
+        h_num = h_intra.astype(jnp.float32) + \
+            inter_scale[..., None] * h_inter.astype(jnp.float32)
+        nq_intra = jnp.sum(w, axis=-1).transpose(0, 2, 1)  # (B,L,H)
+        nq_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32),
+                              n0)
+        nq = nq_intra + inter_scale * nq_inter
+        denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m))
+        h = (h_num / denom[..., None]).astype(qc.dtype)
+        # state update to end of chunk
+        gL, bL = g[:, -1], b[:, -1]                        # (B,H)
+        wS = jnp.exp(u - gL[:, None])                      # (B,L,H)
+        C1 = jnp.exp(m0 - gL)[..., None, None] * C0 + \
+            jnp.einsum("blh,blhd,blhe->bhde", wS, kc.astype(jnp.float32),
+                       vc.astype(jnp.float32))
+        n1 = jnp.exp(m0 - gL)[..., None] * n0 + \
+            jnp.einsum("blh,blhd->bhd", wS, kc.astype(jnp.float32))
+        m1 = bL + gL
+        return {"C": C1, "n": n1, "m": m1}, h
+
+    final, hs = jax.lax.scan(body, state0, (qs, ks, vs, is_, fs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return h, final
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state):
+    """Single-token recurrence. q,k,v: (B,H,dh); i/f_pre: (B,H)."""
+    C0, n0, m0 = state["C"], state["n"], state["m"]
+    lf = jax.nn.log_sigmoid(f_pre)
+    m1 = jnp.maximum(lf + m0, i_pre)
+    fp = jnp.exp(lf + m0 - m1)
+    ip = jnp.exp(i_pre - m1)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C1 = fp[..., None, None] * C0 + ip[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n1 = fp[..., None] * n0 + ip[..., None] * kf
+    h_num = jnp.einsum("bhd,bhde->bhe", qf, C1)
+    nq = jnp.einsum("bhd,bhd->bh", qf, n1)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m1))
+    h = (h_num / denom[..., None]).astype(q.dtype)
+    return h, {"C": C1, "n": n1, "m": m1}
+
+
+def init_mlstm_state(cfg, batch):
+    H = cfg.num_heads
+    dh = mlstm_d_inner(cfg) // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def apply_mlstm_full(cfg, params, x, *, ctx=None, **_):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    h_in = rms_norm(x, params["ln"], cfg.norm_eps)
+    up = h_in @ params["w_up"]
+    if ctx is not None:
+        up = shard(up, ctx, ctx.dp, None, ctx.tp)
+    x_m, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, params, x_m)
+    state0 = init_mlstm_state(cfg, B)
+    hs, final = mlstm_chunked(q, k, v, i_pre, f_pre, state0)
+    di = x_m.shape[-1]
+    hs = _group_norm(hs.reshape(B, S, di), params["gn"], H)
+    y = (hs * jax.nn.silu(z)) @ params["w_down"]
+    y = shard_residual(y, ctx)
+    # conv ring for decode
+    cache = {"mlstm": final,
+             "conv_state": (h_in[:, -3:] @ params["w_up"][:, :di])}
+    return x + y, cache
+
+
+def apply_mlstm_step(cfg, params, x, *, cache, ctx=None, **_):
+    from repro.models.ssm import d_inner_of  # noqa: F401 (parity import)
+    B, d = x.shape
+    H = cfg.num_heads
+    di = mlstm_d_inner(cfg)
+    dh = di // H
+    h_in = rms_norm(x, params["ln"], cfg.norm_eps)
+    up = h_in @ params["w_up"]
+    x_m, z = jnp.split(up, 2, axis=-1)
+    hist = jnp.concatenate([cache["conv_state"], x_m[:, None]], 1)  # (B,4,di)
+    x_c = jnp.einsum("bcd,cd->bd", hist[:, -4:], params["conv_w"]) + params["conv_b"]
+    x_c = jax.nn.silu(x_c)
+    xch = x_c.reshape(B, H, dh)
+    xmh = x_m.reshape(B, H, dh)
+    q = jnp.einsum("bhd,hde->bhe", xch, params["wq_head"])
+    k = jnp.einsum("bhd,hde->bhe", xch, params["wk_head"]) * dh ** -0.5
+    v = jnp.einsum("bhd,hde->bhe", xmh, params["wv_head"])
+    if_pre = x_c.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+    hstep, new_state = mlstm_step(q, k, v, i_pre, f_pre, cache["mlstm"])
+    hs = _group_norm(hstep.reshape(B, di), params["gn"], H)
+    y = (hs * jax.nn.silu(z)) @ params["w_down"]
+    new_cache = dict(cache, mlstm=new_state, conv_state=hist[:, 1:])
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg, key, dtype=None):
+    kg = KeyGen(key)
+    dt = dtype or param_dtype(cfg)
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    f_up = -(-4 * d // 3 // 64) * 64                 # 4/3 GeGLU factor
+    down_scale = 0.02 / max(1, cfg.num_layers) ** 0.5
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "W": dense_init(kg(), (d, 4 * d), dt),
+        "R": dense_init(kg(), (H, dh, 4 * dh), dt, scale=dh ** -0.5),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              3.0 * jnp.ones((d,), jnp.float32),   # fgate bias
+                              jnp.zeros((d,), jnp.float32)]),
+        "gn": jnp.zeros((d,), dt),
+        "ln2": jnp.zeros((d,), dt),
+        "w_up": dense_init(kg(), (d, 2 * f_up), dt),
+        "w_down": dense_init(kg(), (f_up, d), dt, scale=down_scale),
+    }
+
+
+def slstm_step_core(cfg, params, wx_t, state):
+    """One sLSTM step. wx_t: (B, 4d) precomputed input projection."""
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    h0, c0, n0, m0 = state
+    B = wx_t.shape[0]
+    rh = jnp.einsum("bhd,hde->bhe", h0.reshape(B, H, dh), params["R"])
+    pre = (wx_t.reshape(B, H, 4 * dh) + rh).reshape(B, 4 * d).astype(jnp.float32)
+    pre = pre + params["b"]
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    lf = jax.nn.log_sigmoid(f_p)
+    m1 = jnp.maximum(lf + m0, i_p)
+    fp = jnp.exp(lf + m0 - m1)
+    ip = jnp.exp(i_p - m1)
+    c1 = fp * c0 + ip * z
+    n1 = fp * n0 + ip
+    h1 = o * c1 / jnp.maximum(n1, 1e-6)       # fp32 recurrent state
+    return (h1, c1, n1, m1)
+
+
+def init_slstm_state(cfg, batch):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_mlp(cfg, params, y):
+    h = rms_norm(y, params["ln2"], cfg.norm_eps)
+    a, b = jnp.split(h @ params["w_up"], 2, axis=-1)
+    return y + (jax.nn.gelu(a) * b) @ params["w_down"]
+
+
+def apply_slstm_full(cfg, params, x, *, ctx=None, **_):
+    B, S, d = x.shape
+    h_in = rms_norm(x, params["ln"], cfg.norm_eps)
+    wx = h_in @ params["W"]                           # hoisted input proj
+    state0 = init_slstm_state(cfg, B)
+
+    def body(state, wx_t):
+        s1 = slstm_step_core(cfg, params, wx_t, state)
+        return s1, s1[0]
+
+    final, hs = jax.lax.scan(body, state0, wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                        # (B,S,d)
+    hs = _group_norm(hs, params["gn"], cfg.num_heads).astype(x.dtype)
+    y = x + hs
+    y = _slstm_mlp(cfg, params, y)
+    cache = {"slstm": final}
+    return y, cache
+
+
+def apply_slstm_step(cfg, params, x, *, cache, ctx=None, **_):
+    h_in = rms_norm(x, params["ln"], cfg.norm_eps)
+    wx = h_in @ params["W"]
+    s1 = slstm_step_core(cfg, params, wx, cache["slstm"])
+    hs = _group_norm(s1[0], params["gn"], cfg.num_heads).astype(x.dtype)
+    y = x + hs
+    y = _slstm_mlp(cfg, params, y)
+    return y, dict(cache, slstm=s1)

@@ -1,0 +1,84 @@
+"""Optimized-HLO collective byte census.
+
+cost_analysis() does not expose collective traffic, so we parse
+compiled.as_text() and sum the result-shape bytes of every collective op,
+attributed per HLO computation so while-body (lax.scan) collectives can be
+scaled by trip count by callers that know the trip counts.
+
+Per-device traffic model (ring-algorithm ~(n-1)/n factors folded to 1):
+  all-gather          result bytes        (received data)
+  all-reduce          2 x operand bytes   (reduce-scatter + all-gather)
+  reduce-scatter      operand bytes
+  all-to-all          operand bytes
+  collective-permute  operand bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(?P<res>.+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|all-reduce-start|all-gather-start|"
+    r"collective-permute-start)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+_FACTOR = {"all-reduce": 2.0, "all-reduce-start": 2.0,
+           "all-gather": 1.0, "all-gather-start": 1.0,
+           "reduce-scatter": 1.0, "all-to-all": 1.0,
+           "collective-permute": 1.0, "collective-permute-start": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str):
+    """Returns dict: {"total": bytes, "by_op": {...}, "by_computation": {...},
+    "count": n} summed over one execution of each computation (while bodies
+    counted ONCE — callers scale by trip counts)."""
+    by_op: dict = defaultdict(float)
+    by_comp: dict = defaultdict(float)
+    count = 0
+    comp = "entry"
+    for line in hlo_text.splitlines():
+        mcomp = _COMP_RE.match(line)
+        if mcomp and "{" in line:
+            comp = mcomp.group(1)
+            continue
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        base = op.replace("-start", "")
+        nbytes = _shape_bytes(m.group("res"))
+        if base == "all-reduce":
+            # result == operand for all-reduce
+            vol = _FACTOR[op] * nbytes
+        elif base == "all-gather":
+            vol = nbytes                      # result is the gathered buffer
+        else:
+            vol = _FACTOR[op] * nbytes
+        by_op[base] += vol
+        by_comp[comp] += vol
+        count += 1
+    return {"total": float(sum(by_op.values())),
+            "by_op": dict(by_op), "by_computation": dict(by_comp),
+            "count": count}

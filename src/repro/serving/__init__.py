@@ -1,0 +1,6 @@
+from repro.serving.engine import (Request, Response, ServingEngine,
+                                  closed_loop_stream, make_stage_fns,
+                                  profile_stages)
+
+__all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
+           "make_stage_fns", "profile_stages"]

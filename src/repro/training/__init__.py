@@ -1,0 +1,8 @@
+from repro.training.optimizer import AdamW, warmup_cosine
+from repro.training.loop import make_loss_fn, make_train_step, eval_exit_metrics
+from repro.training.data import DifficultyDataset, lm_token_stream
+from repro.training import checkpoint
+
+__all__ = ["AdamW", "warmup_cosine", "make_loss_fn", "make_train_step",
+           "eval_exit_metrics", "DifficultyDataset", "lm_token_stream",
+           "checkpoint"]

@@ -1,0 +1,59 @@
+"""msgpack-based checkpointing for param/opt-state pytrees.
+
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
+reconstructed from a parallel JSON-able skeleton.  No flax/orbax available
+offline — this is a minimal, self-contained equivalent with atomic writes.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    enc = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        enc.append({"dtype": str(arr.dtype), "shape": list(arr.shape),
+                    "data": arr.tobytes()})
+    return {"leaves": enc, "treedef": str(treedef)}
+
+
+def save(path: str, tree, metadata: dict | None = None):
+    payload = {"tree": _encode(tree), "meta": metadata or {}}
+    blob = msgpack.packb(payload, use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    enc = payload["tree"]["leaves"]
+    leaves, treedef = jax.tree.flatten(like)
+    if len(enc) != len(leaves):
+        raise ValueError(f"checkpoint has {len(enc)} leaves, "
+                         f"expected {len(leaves)}")
+    out = []
+    for e, ref in zip(enc, leaves):
+        arr = np.frombuffer(e["data"], dtype=np.dtype(e["dtype"]))
+        arr = arr.reshape(e["shape"])
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(ref)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), payload["meta"]

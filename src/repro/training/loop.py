@@ -1,0 +1,146 @@
+"""Training loop: deep-supervision multi-exit loss + train-step factory.
+
+The paper's anytime networks are trained so every stage's exit head produces
+both an intermediate classification and a confidence (§III-A: "we must train
+the network to generate both the intermediate results after each stage, and
+the confidence estimates").  Deep supervision — a weighted sum of
+cross-entropies over all exits — is exactly that training signal; confidence
+comes for free as (calibrated) max-softmax of each exit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import exits as exits_lib
+from repro.models import forward
+from repro.models.model import apply_layer, embed_one, Sig
+
+MTP_WEIGHT = 0.3
+
+
+def _xent(logits, labels):
+    """Mean cross-entropy. logits: (..., V); labels: (...) int32."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def _exit_loss(cfg, logits, labels):
+    if cfg.modality == "features":
+        return _xent(logits, labels)                     # (B,V) vs (B,)
+    if cfg.modality == "audio_stub":
+        # logits (B,S,ncb,V); labels (B,ncb,S)
+        return _xent(logits, labels.transpose(0, 2, 1))
+    if cfg.modality == "vision_stub":
+        # next-token loss on text positions only
+        n_text = labels.shape[1]
+        return _xent(logits[:, -n_text:], labels)
+    return _xent(logits, labels)                         # (B,S,V) vs (B,S)
+
+
+def _mtp_loss(cfg, params, out, batch, ctx):
+    """DeepSeek-style one-depth multi-token prediction: predict t+2 from the
+    final hidden state combined with the embedding of the (known) t+1 label."""
+    labels = batch["labels"]                             # (B,S) = token t+1
+    h = out.h_final                                      # (B,S,d)
+    emb = jnp.take(params["embed"]["tok"], labels, axis=0)
+    z = jnp.concatenate([h, emb.astype(h.dtype)], -1) @ params["mtp"]["proj"]
+    S = z.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    z, _, _ = apply_layer(cfg, Sig("attn", False), params["mtp"]["block"], z,
+                          mode="train", positions=positions, ctx=ctx)
+    lg = exits_lib.apply_exit(
+        cfg, {**params["mtp"]["exit"], **params["exit_shared"]}, z, ctx=ctx)
+    # target at position t is token t+2 = labels shifted by one
+    return _xent(lg[:, :-1], labels[:, 1:])
+
+
+def make_loss_fn(cfg, *, exit_weights: Optional[tuple] = None, ctx=None,
+                 q_chunk: int = 1024, aux_exit_stride: int = 1):
+    """Returns loss_fn(params, batch) -> scalar.
+
+    batch = {"inputs": <modality inputs>, "labels": <target ids>}.
+    aux_exit_stride > 1 subsamples supervision positions for the non-final
+    exits (§Perf: at 256k vocab the three exit heads otherwise cost more
+    training FLOPs than the 96-layer backbone; deep supervision tolerates
+    sparse positions).
+    """
+    n_stages = cfg.num_stages
+
+    def loss_fn(params, batch):
+        out = forward(cfg, params, batch["inputs"], ctx=ctx, mode="train",
+                      q_chunk=q_chunk, aux_exit_stride=aux_exit_stride)
+        w = exit_weights or tuple(1.0 for _ in out.logits)
+        w = jnp.asarray(w, jnp.float32)
+        w = w / w.sum()
+        total = jnp.zeros((), jnp.float32)
+        labels = batch["labels"]
+        for s, (ws, lg) in enumerate(zip(w, out.logits)):
+            lb = labels
+            if (s < len(out.logits) - 1 and lg.ndim >= 3
+                    and cfg.modality in ("text", "vision_stub")
+                    and lb.shape[-1] != lg.shape[1]):
+                lb = labels[:, ::aux_exit_stride]   # forward already strided h
+            total += ws * _exit_loss(cfg, lg, lb)
+        total += out.aux
+        if cfg.mtp and "mtp" in params and cfg.modality == "text":
+            total += MTP_WEIGHT * _mtp_loss(cfg, params, out, batch, ctx)
+        return total
+
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer, *, ctx=None, exit_weights=None,
+                    q_chunk: int = 1024, donate: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Not jitted here — callers jit with their shardings."""
+    loss_fn = make_loss_fn(cfg, exit_weights=exit_weights, ctx=ctx,
+                           q_chunk=q_chunk)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if ctx is not None:
+            grads = jax.tree.map(
+                lambda g: g, grads)  # pjit inserts the psums via sharding
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u)
+                              .astype(p.dtype), params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def eval_exit_metrics(cfg, params, dataset, *, batch_size: int = 64,
+                      temperature: float = 1.0):
+    """Per-stage accuracy + mean confidence + per-sample records.
+
+    dataset: dict with "inputs" pytree (leading axis N) and "labels".
+    Returns dict with per-stage arrays: correct (N, n_stages) bool,
+    confidence (N, n_stages) — the joint curves the scheduler consumes.
+    """
+    import numpy as np
+
+    fwd = jax.jit(functools.partial(forward, cfg, mode="train",
+                                    conf_temperature=temperature),
+                  static_argnames=())
+    labels = dataset["labels"]
+    N = labels.shape[0]
+    n_stages = cfg.num_stages
+    correct = np.zeros((N, n_stages), bool)
+    confs = np.zeros((N, n_stages), np.float32)
+    for i in range(0, N, batch_size):
+        sl = slice(i, min(N, i + batch_size))
+        inputs = jax.tree.map(lambda x: x[sl], dataset["inputs"])
+        out = fwd(params, inputs)
+        for s, (lg, cf) in enumerate(zip(out.logits, out.confidences)):
+            pred = np.asarray(jnp.argmax(lg, -1))
+            correct[sl, s] = pred == np.asarray(labels[sl])
+            confs[sl, s] = np.asarray(cf)
+    return {"correct": correct, "confidence": confs}

@@ -1,0 +1,30 @@
+import jax
+import pytest
+
+# Tests run single-device on CPU (the 512-device dry-run is subprocess-only,
+# per the assignment: XLA_FLAGS must NOT be set globally here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_inputs(cfg, key, batch, seq):
+    """Shape-correct smoke inputs for any modality."""
+    import jax.numpy as jnp
+    if cfg.modality == "features":
+        from repro.models.model import FEATURE_DIM
+        return {"features": jax.random.normal(key, (batch, seq, FEATURE_DIM))}
+    if cfg.modality == "vision_stub":
+        n_text = max(1, seq - cfg.num_patches)
+        return {
+            "tokens": jax.random.randint(key, (batch, n_text), 0, cfg.vocab_size),
+            "patch_embeds": jax.random.normal(
+                key, (batch, cfg.num_patches, cfg.d_model)),
+        }
+    if cfg.modality == "audio_stub":
+        return {"tokens": jax.random.randint(
+            key, (batch, cfg.num_codebooks, seq), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)}

@@ -1,0 +1,219 @@
+"""Per-kernel allclose validation against the pure-jnp oracles.
+
+Each Pallas kernel is swept over shapes / dtypes / masking configs in
+interpret mode (executes the kernel body on CPU) and asserted against its
+ref.py oracle, per the assignment's kernel-testing requirement.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.exit_confidence import exit_confidence, exit_confidence_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,dh", [
+    (1, 2, 2, 32, 16),       # MHA
+    (2, 4, 2, 64, 32),       # GQA 2:1
+    (1, 8, 1, 128, 64),      # MQA
+    (2, 6, 2, 48, 32),       # ragged seq vs block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 16)])
+def test_flash_attention_sweep(B, H, KV, S, dh, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, H, S, dh), dtype)
+    k = _rand(ks[1], (B, KV, S, dh), dtype)
+    v = _rand(ks[2], (B, KV, S, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_block_shape_independence():
+    """Result must not depend on BlockSpec tile choice."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 2, 64, 32), jnp.float32)
+    k = _rand(ks[1], (1, 2, 64, 32), jnp.float32)
+    v = _rand(ks[2], (1, 2, 64, 32), jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(8, 8), (16, 32), (64, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,dh", [
+    (2, 4, 2, 40, 32),
+    (1, 8, 8, 64, 16),
+    (3, 6, 1, 33, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 8])
+def test_decode_attention_sweep(B, H, KV, S, dh, dtype, window):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (B, H, dh), dtype)
+    k = _rand(ks[1], (B, KV, S, dh), dtype)
+    v = _rand(ks[2], (B, KV, S, dh), dtype)
+    slot_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    slot_pos = slot_pos.at[:, -3:].set(-1)       # unwritten slots
+    cur = jnp.arange(B) * 7 + 10
+    out = decode_attention(q, k, v, slot_pos, cur, window=window, block_k=16)
+    ref = decode_attention_ref(q, k, v, slot_pos, cur, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_decode_attention_ring_semantics():
+    """Non-monotonic slot_pos (ring cache) must mask exactly."""
+    B, H, KV, S, dh = 1, 2, 2, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (B, H, dh), jnp.float32)
+    k = _rand(ks[1], (B, KV, S, dh), jnp.float32)
+    v = _rand(ks[2], (B, KV, S, dh), jnp.float32)
+    # ring of 16 slots after 20 tokens: positions 4..19 wrapped
+    slot_pos = jnp.array([[(16 + i) if i < 4 else i for i in range(S)]])
+    cur = jnp.array([19])
+    out = decode_attention(q, k, v, slot_pos, cur, block_k=8)
+    ref = decode_attention_ref(q, k, v, slot_pos, cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# exit confidence (fused norm + proj + online softmax max)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,d,V", [(4, 32, 100), (8, 64, 1000),
+                                   (3, 128, 517), (16, 64, 32768)])
+@pytest.mark.parametrize("temperature", [1.0, 2.0])
+def test_exit_confidence_sweep(N, d, V, temperature):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    h = _rand(ks[0], (N, d), jnp.float32)
+    scale = 0.1 * _rand(ks[1], (d,), jnp.float32)
+    w = 0.3 * _rand(ks[2], (d, V), jnp.float32)
+    conf, pred, m, lse = exit_confidence(h, scale, w, temperature=temperature,
+                                         block_rows=4, block_v=128)
+    rconf, rpred, rm, rlse = exit_confidence_ref(h, scale, w,
+                                                 temperature=temperature)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(rconf), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(rpred))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(rlse), atol=1e-4)
+    assert bool((conf <= 1.0 + 1e-6).all()) and bool((conf > 0).all())
+
+
+def test_exit_confidence_matches_model_head():
+    """Kernel agrees with the model's exit head + confidence_from_logits."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.models.common import rms_norm
+    from repro.models.exits import confidence_from_logits
+
+    cfg = get_config("anytime-classifier")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    h = _rand(jax.random.PRNGKey(5), (6, cfg.d_model), jnp.float32)
+    ln = params["exits"][0]["ln"]
+    w = params["exit_shared"]["w_out"]
+    conf, pred, _, _ = exit_confidence(h, ln, w, block_rows=2, block_v=64)
+    logits = rms_norm(h, ln, cfg.norm_eps) @ w
+    ref_conf = confidence_from_logits(logits)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(ref_conf),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,d", [(8, 32), (37, 64), (256, 128), (5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(N, d, dtype):
+    x = _rand(jax.random.PRNGKey(6), (N, d), dtype)
+    s = 0.1 * _rand(jax.random.PRNGKey(7), (d,), jnp.float32).astype(dtype)
+    out = rmsnorm(x, s, block_rows=16)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunk kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,L,dh", [(1, 2, 8, 8), (2, 4, 16, 16),
+                                      (2, 2, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_chunk_sweep(B, H, L, dh, dtype):
+    from repro.kernels.mlstm_chunk import mlstm_chunk, mlstm_chunk_ref
+    ks = jax.random.split(jax.random.PRNGKey(8), 7)
+    q = _rand(ks[0], (B, H, L, dh), dtype)
+    k = _rand(ks[1], (B, H, L, dh), dtype)
+    v = _rand(ks[2], (B, H, L, dh), dtype)
+    i_pre = _rand(ks[3], (B, H, L), jnp.float32)
+    f_pre = _rand(ks[4], (B, H, L), jnp.float32) + 2.0
+    C0 = 0.1 * _rand(ks[5], (B, H, dh, dh), jnp.float32)
+    n0 = 0.1 * _rand(ks[6], (B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H))
+    out = mlstm_chunk(q, k, v, i_pre, f_pre, C0, n0, m0)
+    ref = mlstm_chunk_ref(q, k, v, i_pre, f_pre, C0, n0, m0)
+    # the kernel accumulates fully in fp32 while the jnp reference keeps the
+    # intra-chunk matmul in the input dtype -> small bf16 divergence on
+    # near-cancelling normalizers
+    tol = 8e-2 if dtype == jnp.bfloat16 else TOL[dtype]
+    for a, b, nm in zip(out, ref, ("h", "C1", "n1", "m1")):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol, rtol=tol, err_msg=nm)
+
+
+def test_mlstm_chunk_state_chaining():
+    """Two kernel chunks chained == one double-length reference chunk."""
+    from repro.kernels.mlstm_chunk import mlstm_chunk, mlstm_chunk_ref
+    B, H, L, dh = 1, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    q = _rand(ks[0], (B, H, 2 * L, dh), jnp.float32)
+    k = _rand(ks[1], (B, H, 2 * L, dh), jnp.float32)
+    v = _rand(ks[2], (B, H, 2 * L, dh), jnp.float32)
+    i_pre = _rand(ks[3], (B, H, 2 * L), jnp.float32)
+    f_pre = _rand(ks[4], (B, H, 2 * L), jnp.float32) + 2.0
+    C0 = jnp.zeros((B, H, dh, dh))
+    n0 = jnp.zeros((B, H, dh))
+    m0 = jnp.full((B, H), -1e30)
+    h1, C1, n1, m1 = mlstm_chunk(q[:, :, :L], k[:, :, :L], v[:, :, :L],
+                                 i_pre[:, :, :L], f_pre[:, :, :L],
+                                 C0, n0, m0)
+    h2, C2, n2, m2 = mlstm_chunk(q[:, :, L:], k[:, :, L:], v[:, :, L:],
+                                 i_pre[:, :, L:], f_pre[:, :, L:],
+                                 C1, n1, m1)
+    href, Cref, nref, mref = mlstm_chunk_ref(q, k, v, i_pre, f_pre,
+                                             C0, n0, m0)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 2)),
+                               np.asarray(href), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(C2), np.asarray(Cref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mref), atol=1e-5)

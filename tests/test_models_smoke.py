@@ -1,0 +1,198 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture is instantiated as a REDUCED variant of the same
+family (2+ layers, d_model<=512, <=4 experts) and runs one forward / train
+step on CPU, asserting output shapes and absence of NaNs.  Full configs are
+exercised only via the dry-run.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_inputs
+from repro.configs import all_arch_ids, get_config
+from repro.models import (decode_step, forward, init_decode_cache,
+                          init_params, stage_forward, stage_layouts)
+
+ARCHS = list(all_arch_ids())
+
+
+def _expected_label_shape(cfg, batch, seq):
+    if cfg.modality == "features":
+        return (batch,)
+    if cfg.modality == "audio_stub":
+        return (batch, cfg.num_codebooks, seq)
+    return (batch, seq)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_and_nans(arch, rng):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.moe is None or cfg.moe.num_experts <= 4
+    params = init_params(cfg, rng)
+    B, S = 2, 32
+    inputs = make_inputs(cfg, jax.random.PRNGKey(1), B, S)
+    out = forward(cfg, params, inputs, mode="train")
+    n_stages = len(stage_layouts(cfg))
+    assert len(out.logits) == n_stages
+    for lg, conf in zip(out.logits, out.confidences):
+        if cfg.modality == "features":
+            assert lg.shape == (B, cfg.vocab_size)
+            assert conf.shape == (B,)
+        elif cfg.modality == "audio_stub":
+            assert lg.shape == (B, S, cfg.num_codebooks, cfg.vocab_size)
+        elif cfg.modality == "vision_stub":
+            assert lg.shape[0] == B and lg.shape[-1] == cfg.vocab_size
+        else:
+            assert lg.shape == (B, S, cfg.vocab_size)
+        assert not bool(jnp.isnan(lg).any())
+        assert not bool(jnp.isnan(conf).any())
+        assert bool((conf >= 0).all()) and bool((conf <= 1.0 + 1e-6).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch, rng):
+    """One SGD step decreases nothing catastrophically & produces finite grads."""
+    from repro.training.loop import make_loss_fn
+
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, rng)
+    B, S = 2, 16
+    inputs = make_inputs(cfg, jax.random.PRNGKey(1), B, S)
+    labels = jax.random.randint(jax.random.PRNGKey(2),
+                                _expected_label_shape(cfg, B, S), 0,
+                                cfg.vocab_size)
+    loss_fn = make_loss_fn(cfg)
+    loss, grads = jax.value_and_grad(loss_fn)(params,
+                                              {"inputs": inputs,
+                                               "labels": labels})
+    assert jnp.isfinite(loss)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    # at least some gradient signal reaches the embedding
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in flat)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    if cfg.modality == "features":
+        pytest.skip("classifier has no decode path")
+    params = init_params(cfg, rng)
+    B = 2
+    cache = init_decode_cache(cfg, B, slots=8)
+    tok = (jnp.zeros((B, cfg.num_codebooks), jnp.int32)
+           if cfg.modality == "audio_stub" else jnp.zeros((B,), jnp.int32))
+    ex, new_cache = decode_step(cfg, params, cache, tok,
+                                jnp.zeros((B,), jnp.int32))
+    for lg in ex.logits:
+        assert lg.shape[0] == B and lg.shape[-1] == cfg.vocab_size
+        assert not bool(jnp.isnan(lg).any())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+CONSISTENCY_ARCHS = ["qwen3-4b", "gemma3-4b", "xlstm-1.3b",
+                     "jamba-1.5-large-398b", "deepseek-v3-671b",
+                     "musicgen-medium", "mistral-large-123b"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_full_forward(arch, rng):
+    """Token-by-token decode reproduces the full forward's last-position
+    logits (capacity factor raised for MoE archs: GShard capacity drops are
+    a prefill-only semantic and would otherwise differ by construction)."""
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, rng)
+    B, S = 2, 16
+    inputs = make_inputs(cfg, jax.random.PRNGKey(1), B, S)
+    out = forward(cfg, params, inputs, mode="train")
+    full_last = out.logits[-1][:, -1]
+    cache = init_decode_cache(cfg, B, slots=S)
+    toks = inputs["tokens"]
+    for t in range(S):
+        tok = toks[:, :, t] if cfg.modality == "audio_stub" else toks[:, t]
+        ex, cache = decode_step(cfg, params, cache, tok,
+                                jnp.full((B,), t, jnp.int32))
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(ex.logits[-1]),
+                               np.asarray(full_last), rtol=5e-3, atol=5e-3)
+
+
+def test_ring_buffer_cache_matches_window_mask(rng):
+    """swa-8192 analog: a ring cache of W slots must equal full attention
+    with an explicit W-token sliding window."""
+    import dataclasses
+
+    import numpy as np
+    cfg = get_config("gemma3-4b").reduced()
+    cfg = dataclasses.replace(cfg, period=("attn_local",), num_layers=2,
+                              sliding_window=8, num_stages=1)
+    params = init_params(cfg, rng)
+    B, S, W = 2, 24, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    out = forward(cfg, params, {"tokens": toks}, mode="train")
+    cache = init_decode_cache(cfg, B, slots=W)   # ring of W slots
+    for t in range(S):
+        ex, cache = decode_step(cfg, params, cache, toks[:, t],
+                                jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(ex.logits[-1]),
+                               np.asarray(out.logits[-1][:, -1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_stage_forward_composes_to_full_forward(rng):
+    """The scheduler's stage-granular dispatch equals the monolithic
+    forward — the property that makes imprecise computation exact."""
+    import numpy as np
+    cfg = get_config("anytime-classifier")
+    params = init_params(cfg, rng)
+    B, S = 3, 16
+    inputs = make_inputs(cfg, jax.random.PRNGKey(1), B, S)
+    ref = forward(cfg, params, inputs, mode="train")
+
+    h = inputs
+    for s in range(cfg.num_stages):
+        h, lg, conf = stage_forward(cfg, params, s, h, mode="train")
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(ref.logits[s]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(conf),
+                                   np.asarray(ref.confidences[s]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_param_counts_match_assignment_scale():
+    """Analytic parameter counts are in the advertised ballpark."""
+    from repro.models import count_params_analytic
+    expect = {
+        "mistral-large-123b": (100e9, 150e9),
+        "nemotron-4-340b": (300e9, 380e9),
+        "deepseek-v3-671b": (600e9, 750e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "jamba-1.5-large-398b": (330e9, 480e9),
+        "pixtral-12b": (10e9, 15e9),
+        "qwen3-4b": (3e9, 5e9),
+        "gemma3-4b": (3e9, 5.5e9),
+        "xlstm-1.3b": (1.0e9, 2.5e9),   # multi-exit heads + 3-stage structure
+                                        # add params over the bare 1.3B stack
+        "musicgen-medium": (1.3e9, 2.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params_analytic(get_config(arch))
+        assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)
+
+
+def test_moe_active_params():
+    from repro.models import count_params_analytic
+    cfg = get_config("deepseek-v3-671b")
+    total = count_params_analytic(cfg)
+    active = count_params_analytic(cfg, active_only=True)
+    assert 25e9 <= active <= 45e9          # ~37B active
+    assert active < 0.1 * total

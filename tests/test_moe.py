@@ -1,0 +1,114 @@
+"""MoE unit + property tests: routing invariants, capacity semantics,
+dispatch-table correctness, load-balance loss."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_mod
+
+
+def _cfg(E=4, k=2, cf=1.25, d_ff=32, shared=0):
+    base = get_config("qwen3-4b").reduced()
+    return dataclasses.replace(
+        base, moe=MoEConfig(num_experts=E, top_k=k, d_ff_expert=d_ff,
+                            capacity_factor=cf, num_shared_experts=shared))
+
+
+def test_route_gates_normalized():
+    cfg = _cfg()
+    logits = jax.random.normal(jax.random.PRNGKey(0), (32, 4))
+    gates, idx, aux = moe_mod._route(cfg, logits)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert bool((idx >= 0).all()) and bool((idx < 4).all())
+    assert float(aux) >= 0.95                # ~1 when roughly balanced
+
+
+def test_aux_loss_minimal_when_balanced():
+    cfg = _cfg(E=4, k=1)
+    # perfectly uniform router -> aux == E * sum_e (1/E * 1/E) * E... == 1
+    logits = jnp.zeros((64, 4))
+    _, _, aux_uniform = moe_mod._route(cfg, logits)
+    # maximally imbalanced: all tokens to expert 0
+    logits_bad = jnp.full((64, 4), -10.0).at[:, 0].set(10.0)
+    _, _, aux_bad = moe_mod._route(cfg, logits_bad)
+    assert float(aux_bad) > float(aux_uniform) * 1.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6), st.integers(4, 64), st.integers(2, 8),
+       st.integers(1, 3))
+def test_dispatch_tables_property(seed, T, E, k):
+    """Every expert slot holds a distinct (token, expert) assignment; no
+    expert exceeds capacity; kept assignments are exactly the lowest-rank
+    ones per expert."""
+    cfg = _cfg(E=E, k=min(k, E))
+    k = cfg.moe.top_k
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, E, size=(T, k)))
+    cap = moe_mod._capacity(cfg, T)
+    dispatch, assign = moe_mod._dispatch_tables(cfg, idx, T, cap)
+    dispatch = np.asarray(dispatch)
+    assign = np.asarray(assign)
+    flat = np.asarray(idx).reshape(-1)
+    for e in range(E):
+        slots = dispatch[e]
+        used = slots[slots < T]
+        # every filled slot's token really routed to e
+        for c, tok in enumerate(slots):
+            if tok < T:
+                a = assign[e, c]
+                assert a >= 0
+                assert flat[a] == e
+                assert a // k == tok
+        assert len(used) <= cap
+        # count of kept == min(total routed to e, cap)
+        assert len(used) == min((flat == e).sum(), cap)
+
+
+def test_capacity_bounds():
+    cfg = _cfg(E=256, k=8, cf=1.25)
+    # tiny token count: no 4x256 padding explosion (§Perf iteration 1b)
+    assert moe_mod._capacity(cfg, 8) <= 8 * 8
+    assert moe_mod._capacity(cfg, 8) >= 1
+    # large token count: ~ T*k*cf/E
+    c = moe_mod._capacity(cfg, 65536)
+    assert abs(c - 65536 * 8 * 1.25 / 256) <= 4
+
+
+def test_moe_gather_zero_for_dropped_tokens():
+    """With capacity 1 and many tokens on one expert, dropped tokens receive
+    only the shared-expert (here: zero) contribution."""
+    cfg = _cfg(E=2, k=1, cf=0.01)
+    params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    T, d = 16, cfg.d_model
+    h = jnp.ones((T, d))
+    # force all tokens to expert 0
+    params = dict(params, router=jnp.zeros((d, 2)).at[:, 0].set(1.0))
+    y, aux = moe_mod.moe_gather(cfg, params, h, None)
+    cap = moe_mod._capacity(cfg, T)
+    nz = np.asarray(jnp.abs(y).sum(-1) > 1e-6)
+    assert nz.sum() == cap
+
+
+def test_moe_deterministic():
+    cfg = _cfg()
+    params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    h = jax.random.normal(jax.random.PRNGKey(1), (24, cfg.d_model))
+    y1, a1 = moe_mod.moe_gather(cfg, params, h, None)
+    y2, a2 = moe_mod.moe_gather(cfg, params, h, None)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_shared_expert_always_contributes():
+    cfg = _cfg(shared=1, cf=0.01)   # near-zero routed capacity
+    params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_mod.apply_moe(cfg, params, x)
+    # residual + shared expert => output differs from input everywhere
+    assert bool((jnp.abs(y - x).sum(-1) > 1e-6).all())
