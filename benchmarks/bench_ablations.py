@@ -19,7 +19,6 @@ import os
 import numpy as np
 
 from repro.core import RTDeepIoT, Workload, make_predictor, simulate
-from repro.core.schedulers import Policy
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 WL = dict(n_clients=20, d_lo=0.01, d_hi=0.3, n_requests=500)

@@ -1,10 +1,13 @@
 """End-to-end anytime serving driver (paper Fig. 2) — REAL model, wall clock.
 
 Loads the trained anytime classifier, profiles per-stage WCETs (99th
-percentile, paper §IV protocol), then serves batched requests from K
-concurrent clients under uniform-random relative deadlines with the
-RTDeepIoT scheduler vs. EDF, reporting accuracy / miss rate / latency from
-actual jitted stage executions on this host.
+percentile, paper §IV protocol) plus the host dispatch overhead, then
+serves requests from K concurrent clients under uniform-random relative
+deadlines with the RTDeepIoT scheduler vs. EDF, reporting accuracy / miss
+rate / latency from actual jitted stage executions on this host — on both
+the unbatched ServingEngine and the continuous micro-batching
+BatchedServingEngine (repro.serving.batch), whose per-bucket stage WCETs
+are profiled the same way.
 
 Also writes artifacts/stage_times.npz so the simulation benchmarks use the
 profiled WCETs.
@@ -22,8 +25,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import EDF, RTDeepIoT, make_predictor
 from repro.models import init_params
-from repro.serving import (ServingEngine, closed_loop_stream, make_stage_fns,
-                           profile_stages)
+from repro.serving import (BatchedServingEngine, BatchedStageFns,
+                           ServingEngine, closed_loop_stream, make_stage_fns,
+                           profile_batched_stages, profile_stages)
 from repro.training import DifficultyDataset, checkpoint
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -37,6 +41,9 @@ def main(argv=None):
                     help="min relative deadline (default: 1.2x one stage)")
     ap.add_argument("--d-hi", type=float, default=None,
                     help="max relative deadline (default: 6x one stage)")
+    ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8],
+                    help="pre-compiled batch-size buckets for the batched "
+                         "engine")
     args = ap.parse_args(argv)
 
     cfg = get_config("anytime-classifier")
@@ -56,27 +63,26 @@ def main(argv=None):
     # --- profile stages (paper §IV: WCET = upper CI over profiling runs) ---
     stage_fns = make_stage_fns(cfg)
     sample = jax.tree.map(lambda x: x[:1], test["inputs"])
-    wcet, times = profile_stages(cfg, params, stage_fns, sample, n_runs=60)
+    wcet, times, host_overhead = profile_stages(cfg, params, stage_fns,
+                                                sample, n_runs=60)
     print("stage WCETs (s):", np.round(wcet, 5),
-          " means:", np.round(times.mean(1), 5))
-    np.savez(os.path.join(ART, "stage_times.npz"), wcet=wcet, samples=times)
+          " means:", np.round(times.mean(1), 5),
+          f" host_overhead={host_overhead*1e6:.1f}us")
+    np.savez(os.path.join(ART, "stage_times.npz"), wcet=wcet, samples=times,
+             host_overhead=host_overhead)
+
+    # --- profile *batched* stage WCETs for the micro-batching engine ------
+    buckets = tuple(sorted(args.buckets))
+    bfns = BatchedStageFns(cfg, buckets)
+    time_model, bmat = profile_batched_stages(cfg, params, bfns, sample,
+                                              n_runs=30)
+    print("batched stage WCETs (s) [stage x bucket]:\n", np.round(bmat, 5))
 
     d_lo = args.d_lo or float(4.0 * wcet.max())
     d_hi = args.d_hi or float(14.0 * wcet.max())
     print(f"deadlines ~ U[{d_lo:.4f}, {d_hi:.4f}] s, {args.clients} clients")
 
-    results = {}
-    for name, policy in [
-        ("rtdeepiot", RTDeepIoT(make_predictor("exp", prior_curve=[.5, .7, .85]))),
-        ("edf", EDF()),
-    ]:
-        stream = closed_loop_stream(test["inputs"], test["labels"],
-                                    n_clients=args.clients, d_lo=d_lo,
-                                    d_hi=d_hi, n_requests=args.requests,
-                                    seed=1)
-        eng = ServingEngine(cfg, params, policy, stage_wcet=wcet,
-                            host_overhead=float(np.median(times) * 0.05))
-        responses = eng.run(stream)
+    def report(name, responses, sched_time):
         labels = np.asarray(test["labels"])
         correct = [r.prediction == labels[r.sample]
                    for r in responses if not r.missed]
@@ -85,10 +91,35 @@ def main(argv=None):
         depth = float(np.mean([r.depth for r in responses if not r.missed]
                               or [0]))
         lat = float(np.mean([r.latency for r in responses]))
-        print(f"{name:10s} n={len(responses)} acc={acc:.3f} miss={miss:.3f} "
+        print(f"{name:18s} n={len(responses)} acc={acc:.3f} miss={miss:.3f} "
               f"mean_depth={depth:.2f} mean_latency={lat*1e3:.1f}ms "
-              f"sched_overhead={eng.policy.sched_time:.3f}s")
-        results[name] = dict(acc=acc, miss=miss, depth=depth)
+              f"sched_overhead={sched_time:.3f}s")
+        return dict(acc=acc, miss=miss, depth=depth)
+
+    def stream():
+        return closed_loop_stream(test["inputs"], test["labels"],
+                                  n_clients=args.clients, d_lo=d_lo,
+                                  d_hi=d_hi, n_requests=args.requests,
+                                  seed=1)
+
+    def policies():
+        return [("rtdeepiot", RTDeepIoT(make_predictor(
+                    "exp", prior_curve=[.5, .7, .85]))),
+                ("edf", EDF())]
+
+    results = {}
+    for name, policy in policies():
+        eng = ServingEngine(cfg, params, policy, stage_wcet=wcet,
+                            host_overhead=host_overhead)
+        results[name] = report(name, eng.run(stream()),
+                               eng.policy.sched_time)
+    for name, policy in policies():
+        eng = BatchedServingEngine(cfg, params, policy,
+                                   time_model=time_model, stage_fns=bfns,
+                                   host_overhead=host_overhead)
+        results[f"batched-{name}"] = report(f"batched-{name}",
+                                            eng.run(stream()),
+                                            eng.policy.sched_time)
     return results
 
 

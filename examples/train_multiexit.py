@@ -14,17 +14,15 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
 from repro.training import (AdamW, DifficultyDataset, checkpoint,
-                            eval_exit_metrics, make_loss_fn, make_train_step,
+                            eval_exit_metrics, make_train_step,
                             warmup_cosine)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")

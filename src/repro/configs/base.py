@@ -6,9 +6,8 @@ variant of the same family (>=2 layers, d_model<=512, <=4 experts).
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Sequence
 
 

@@ -28,13 +28,19 @@ class Policy:
         self.invocations = 0
 
     def on_arrival(self, active, task, now):
-        task.assigned_depth = task.num_stages
+        task.assigned_depth = task.clamp_depth(task.num_stages)
 
     def on_stage_done(self, active, task, now):
         pass
 
     def next_task(self, active, now) -> Optional[object]:
         raise NotImplementedError
+
+    def batch_rank(self, task, now):
+        """Preference key for batch composition (repro.serving.batch):
+        co-runners at the leader's stage are admitted in this order.
+        Default = EDF order; utility-aware policies override."""
+        return (task.deadline, task.tid)
 
     def _runnable(self, active, now):
         return [t for t in active
@@ -55,7 +61,8 @@ class RTDeepIoT(Policy):
         t0 = time.perf_counter()
         assignment = self.planner.plan(active, now, self.predictor)
         for t in active:
-            t.assigned_depth = max(assignment.get(t.tid, t.executed),
+            t.assigned_depth = max(t.clamp_depth(assignment.get(t.tid,
+                                                                t.executed)),
                                    t.executed)
         self.sched_time += time.perf_counter() - t0
         self.invocations += 1
@@ -71,6 +78,9 @@ class RTDeepIoT(Policy):
         others = [t for t in active
                   if t.tid != task.tid and t.deadline > now]
         greedy_update(task, others, self.predictor)
+        for t in (task, *others):       # admission caps survive the swap
+            t.assigned_depth = max(t.clamp_depth(t.assigned_depth),
+                                   t.executed)
         self.sched_time += time.perf_counter() - t0
         self.invocations += 1
 
@@ -105,6 +115,9 @@ class LCF(Policy):
             return None
         return min(r, key=lambda t: (t.last_confidence or 0.0,
                                      t.deadline, t.tid))
+
+    def batch_rank(self, task, now):
+        return (task.last_confidence or 0.0, task.deadline, task.tid)
 
 
 class RR(Policy):

@@ -42,10 +42,13 @@ class SimResult:
     overhead_frac: float
     n_requests: int
     per_request: list
+    makespan: float = 0.0          # simulated seconds until the last event
+    throughput: float = 0.0        # completed (non-missed) requests / second
 
     def row(self):
         return dict(accuracy=self.accuracy, miss_rate=self.miss_rate,
-                    mean_depth=self.mean_depth, overhead=self.overhead_frac)
+                    mean_depth=self.mean_depth, overhead=self.overhead_frac,
+                    throughput=self.throughput)
 
 
 def simulate(policy, workload: Workload, stage_times, conf_table,
@@ -98,8 +101,10 @@ def simulate(policy, workload: Workload, stage_times, conf_table,
         finished.append(dict(tid=task.tid, missed=missed, correct=correct,
                              depth=depth, conf=conf, client=task.client,
                              deadline=task.deadline, arrival=task.arrival))
-        heapq.heappush(events, (max(now, task.deadline), -task.tid, "issue",
-                                task.client))
+        # closed loop: the client reissues at *completion* time — a request
+        # that finishes early frees its client immediately (an expired one
+        # retires at its deadline, so `now` is correct in both cases)
+        heapq.heappush(events, (now, -task.tid, "issue", task.client))
 
     def charge(dt):
         nonlocal now, sched_charged
@@ -153,8 +158,11 @@ def simulate(policy, workload: Workload, stage_times, conf_table,
                     charge(_wall() - w0)
 
     # drain any still-active tasks (simulation ended)
+    makespan = now
     for t in list(active):
-        retire(t, max(now, t.deadline))
+        tend = max(now, t.deadline)
+        makespan = max(makespan, tend)
+        retire(t, tend)
 
     n = len(finished)
     acc = float(np.mean([f["correct"] for f in finished])) if n else 0.0
@@ -164,10 +172,13 @@ def simulate(policy, workload: Workload, stage_times, conf_table,
     conf = float(np.mean([f["conf"] for f in finished if not f["missed"]])
                  ) if n else 0.0
     denom = total_busy + policy.sched_time
+    ok = sum(1 for f in finished if not f["missed"])
     return SimResult(accuracy=acc, miss_rate=miss, mean_depth=depth,
                      mean_conf=conf,
                      overhead_frac=policy.sched_time / denom if denom else 0.0,
-                     n_requests=n, per_request=finished)
+                     n_requests=n, per_request=finished,
+                     makespan=makespan,
+                     throughput=ok / makespan if makespan > 0 else 0.0)
 
 
 def _wall():

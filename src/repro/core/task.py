@@ -30,6 +30,7 @@ class Task:
     executed: int = 0                # stages completed so far
     confidences: list = dataclasses.field(default_factory=list)
     assigned_depth: int = 0          # current depth target l_i
+    depth_cap: Optional[int] = None  # admission-control ceiling on l_i
     finished_at: Optional[float] = None
     dropped: bool = False
 
@@ -55,3 +56,33 @@ class Task:
 
     def slack(self, now: float) -> float:
         return self.deadline - now
+
+    # batch-aware timing helpers (repro.serving.batch) ----------------------
+    def fits_batch(self, now: float, batch_wcet: float,
+                   eps: float = 1e-12) -> bool:
+        """Can this task ride a (non-preemptive) batched stage of WCET
+        `batch_wcet` dispatched at `now` without missing its deadline?"""
+        return now + batch_wcet <= self.deadline + eps
+
+    def batch_slack(self, now: float, batch_wcet: float) -> float:
+        """Slack left after one batched stage of WCET `batch_wcet`."""
+        return self.deadline - now - batch_wcet
+
+    def clamp_depth(self, depth: int) -> int:
+        """Apply the admission-control depth cap (no-op when uncapped)."""
+        cap = self.num_stages if self.depth_cap is None else self.depth_cap
+        return min(depth, cap)
+
+    def feasible_depth(self, now: float, stage_time=None) -> int:
+        """Deepest depth reachable by the deadline when the remaining stages
+        run back-to-back from `now`.  `stage_time` maps stage index ->
+        duration (defaults to this task's own profiled stage_times)."""
+        f = (lambda s: self.stage_times[s]) if stage_time is None \
+            else stage_time
+        t, depth = now, self.executed
+        for s in range(self.executed, self.num_stages):
+            t += f(s)
+            if t > self.deadline + 1e-12:
+                break
+            depth = s + 1
+        return depth

@@ -14,7 +14,7 @@ on the training set — available to the serving system from calibration).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

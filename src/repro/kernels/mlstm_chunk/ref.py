@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.xlstm import mlstm_chunked
 
 
 def mlstm_chunk_ref(q, k, v, i_pre, f_pre, C0, n0, m0):

@@ -7,7 +7,6 @@ precomputed patch embeddings, audio inputs are EnCodec token streams.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

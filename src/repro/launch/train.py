@@ -10,11 +10,9 @@ checkpoint.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

@@ -18,7 +18,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (KeyGen, ParallelCtx, apply_rope, dense_init,
+from repro.models.common import (KeyGen, apply_rope, dense_init,
                                  param_dtype, rms_norm, rms_norm_head, shard,
                                  shard_residual)
 

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention, exits, ffn, moe, ssm, xlstm
-from repro.models.common import KeyGen, ParallelCtx, dense_init, param_dtype, shard
+from repro.models.common import KeyGen, dense_init, param_dtype, shard
 
 FEATURE_DIM = 32  # input feature width for the "features" modality
 

@@ -16,7 +16,6 @@ buffer, as in GShard/Switch).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

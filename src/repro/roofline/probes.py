@@ -27,7 +27,6 @@ collective bytes parsed from its optimized HLO scale identically.
 """
 from __future__ import annotations
 
-import math
 from collections import Counter
 
 import jax

@@ -1,6 +1,15 @@
 from repro.serving.engine import (Request, Response, ServingEngine,
                                   closed_loop_stream, make_stage_fns,
-                                  profile_stages)
+                                  profile_host_overhead, profile_stages)
+from repro.serving.batch import (AdmissionController, BatchedPolicy,
+                                 BatchedServingEngine, BatchedStageFns,
+                                 BatchPolicy, BatchTimeModel, StageBatcher,
+                                 as_batch_policy, pad_batch,
+                                 profile_batched_stages, simulate_batched)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
-           "make_stage_fns", "profile_stages"]
+           "make_stage_fns", "profile_host_overhead", "profile_stages",
+           "AdmissionController", "BatchedPolicy", "BatchedServingEngine",
+           "BatchedStageFns", "BatchPolicy", "BatchTimeModel",
+           "StageBatcher", "as_batch_policy", "pad_batch",
+           "profile_batched_stages", "simulate_batched"]

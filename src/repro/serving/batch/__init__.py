@@ -1,0 +1,31 @@
+"""Continuous stage-level micro-batching serving subsystem.
+
+Layers (see ROADMAP.md "Serving architecture"):
+  batcher     BatchTimeModel (per-bucket stage WCETs) + StageBatcher
+              (greedy deadline-feasible batch formation)          [no jax]
+  policy      BatchPolicy contract + BatchedPolicy adapter        [no jax]
+  admission   AdmissionController (reject / depth-cap)            [no jax]
+  stage_fns   padded, shape-bucketed jitted stage functions
+  engine      BatchedServingEngine (wall clock)
+  simulator   simulate_batched (discrete event) — same policies,
+              same batch semantics as the wall-clock path
+"""
+from repro.serving.batch.admission import (AdmissionController,
+                                           AdmissionDecision)
+from repro.serving.batch.batcher import (DEFAULT_BUCKETS, BatchTimeModel,
+                                         StageBatcher, bucket_for)
+from repro.serving.batch.engine import BatchedServingEngine
+from repro.serving.batch.policy import (BatchedPolicy, BatchPolicy,
+                                        as_batch_policy)
+from repro.serving.batch.simulator import simulate_batched
+from repro.serving.batch.stage_fns import (BatchedStageFns, pad_batch,
+                                           profile_batched_stages,
+                                           split_rows)
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision", "BatchTimeModel",
+    "BatchedPolicy", "BatchPolicy", "BatchedServingEngine",
+    "BatchedStageFns", "DEFAULT_BUCKETS", "StageBatcher", "as_batch_policy",
+    "bucket_for", "pad_batch", "profile_batched_stages", "simulate_batched",
+    "split_rows",
+]

@@ -1,0 +1,91 @@
+"""Admission control: reject or depth-cap requests an overloaded queue
+cannot serve.
+
+The paper's scheduler maximizes accuracy *given* the active set; under
+sustained overload that still means every request limps through at
+mandatory depth and many expire with zero stages done.  The controller
+makes the overload decision explicit at arrival time:
+
+* **mandatory-infeasible** — even the mandatory part, run solo at
+  single-batch speed, cannot meet the deadline: never admitted.
+* **overload** — the optimistic backlog (everyone's remaining mandatory
+  work, amortized at the largest bucket's per-item rate — the best the
+  batched engine could possibly do) already spends this request's slack:
+  ``mode="reject"`` drops it (the client can fail fast / retry elsewhere),
+  ``mode="depth_cap"`` admits it pinned to its mandatory depth.
+* otherwise the request is admitted; in ``depth_cap`` mode its depth is
+  capped at what is solo-feasible (``Task.feasible_depth`` under
+  single-batch WCETs), which keeps the FPTAS from planning depths that
+  only exist on paper.
+
+Caps are applied through ``Task.depth_cap``, which every Policy's depth
+assignment clamps against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.batch.batcher import BatchTimeModel
+
+MODES = ("off", "reject", "depth_cap")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    depth_cap: Optional[int]       # None = uncapped
+    reason: str
+
+
+class AdmissionController:
+    def __init__(self, time_model: BatchTimeModel, mode: str = "depth_cap",
+                 headroom: float = 1.0):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        self.time_model = time_model
+        self.mode = mode
+        self.headroom = headroom   # >1.0 = admit less (safety margin)
+        self.rejected = 0
+        self.capped = 0
+
+    # ------------------------------------------------------------------
+    def _amortized(self, stage: int) -> float:
+        tm = self.time_model
+        return tm.per_item(stage, tm.max_batch)
+
+    def decide(self, active, task, now: float) -> AdmissionDecision:
+        if self.mode == "off":
+            return AdmissionDecision(True, None, "off")
+        tm = self.time_model
+        mand_solo = sum(tm.wcet(s, 1) for s in range(task.mandatory))
+        if not task.fits_batch(now, mand_solo):
+            return AdmissionDecision(False, None, "mandatory-infeasible")
+        # optimistic backlog: mandatory work still owed by the active set,
+        # at the best per-item rate batching can buy
+        backlog = sum(
+            sum(self._amortized(s)
+                for s in range(t.executed, max(t.mandatory, t.executed)))
+            for t in active)
+        own = sum(self._amortized(s) for s in range(task.mandatory))
+        if now + (backlog + own) * self.headroom > task.deadline:
+            if self.mode == "reject":
+                return AdmissionDecision(False, None, "overload")
+            return AdmissionDecision(True, task.mandatory, "overload-capped")
+        if self.mode == "depth_cap":
+            d = task.feasible_depth(now, stage_time=lambda s: tm.wcet(s, 1))
+            if d < task.num_stages:
+                return AdmissionDecision(True, max(task.mandatory, d),
+                                         "deadline-capped")
+        return AdmissionDecision(True, None, "ok")
+
+    def apply(self, active, task, now: float) -> AdmissionDecision:
+        """Decide and mutate ``task.depth_cap``; caller drops on reject."""
+        dec = self.decide(active, task, now)
+        if not dec.admitted:
+            self.rejected += 1
+            task.dropped = True
+        elif dec.depth_cap is not None:
+            self.capped += 1
+            task.depth_cap = max(task.mandatory, dec.depth_cap)
+        return dec

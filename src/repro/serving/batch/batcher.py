@@ -1,0 +1,143 @@
+"""Batch formation: shape-bucketed, deadline-feasible stage micro-batches.
+
+Two pieces, both accelerator-agnostic (no jax import — the discrete-event
+simulator uses them too):
+
+* ``BatchTimeModel`` — profiled WCET of one *batched* stage execution per
+  (stage, batch-size bucket).  Buckets are the small set of batch sizes the
+  engine pre-compiles (default {1, 2, 4, 8, 16}); any batch is padded up to
+  the next bucket, so the batch WCET is the bucket's WCET.
+* ``StageBatcher`` — greedy deadline-feasible batch formation around a
+  leader task.  Invariant (the paper's §II-B deadline semantics lifted to
+  batches): admitting a task into a batch must not push any member past its
+  deadline, where the batch's cost is the bucket-rounded WCET of the grown
+  batch.
+
+The non-preemptible region of §II-B therefore becomes one *batched* stage:
+once a batch is dispatched, every member is committed for the full batch
+WCET.  That is exactly why admission checks the grown batch's WCET against
+*all* members — a bigger batch is cheaper per item but longer wall-clock.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16)
+
+
+def bucket_for(n: int, buckets) -> int:
+    """Smallest bucket holding a batch of `n` (batches are padded up).
+
+    The single source of the bucket-rounding rule: BatchTimeModel pricing
+    and BatchedStageFns padding both resolve through it."""
+    i = bisect.bisect_left(buckets, n)
+    if n < 1 or i == len(buckets):
+        raise ValueError(f"batch of {n} exceeds buckets {tuple(buckets)}")
+    return buckets[i]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchTimeModel:
+    """WCET table for batched stage executions.
+
+    ``times[bi][s]`` = worst-case seconds of stage ``s`` run at batch-size
+    bucket ``buckets[bi]``.
+    """
+    buckets: tuple                 # ascending batch-size buckets, e.g. (1,2,4)
+    times: tuple                   # times[bucket_index][stage] -> seconds
+
+    def __post_init__(self):
+        if tuple(sorted(self.buckets)) != tuple(self.buckets):
+            raise ValueError(f"buckets must ascend: {self.buckets}")
+        if len(self.times) != len(self.buckets):
+            raise ValueError("one WCET row per bucket required")
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.times[0])
+
+    def bucket_for(self, n: int) -> int:
+        return bucket_for(n, self.buckets)
+
+    def wcet(self, stage: int, n: int = 1) -> float:
+        """WCET of stage `stage` executed as a batch of `n` (bucket-padded)."""
+        bi = bisect.bisect_left(self.buckets, self.bucket_for(n))
+        return float(self.times[bi][stage])
+
+    def per_item(self, stage: int, n: int = 1) -> float:
+        """Amortized per-request cost of a batch of `n` — the throughput
+        lever: with sub-linear batch scaling this falls as `n` grows."""
+        return self.wcet(stage, n) / max(1, n)
+
+    def single_times(self) -> tuple:
+        """Per-stage WCETs at batch size 1 (what Task.stage_times carries)."""
+        return tuple(float(self.times[0][s]) for s in range(self.num_stages))
+
+    @classmethod
+    def linear(cls, stage_times, buckets=DEFAULT_BUCKETS,
+               marginal: float = 0.15) -> "BatchTimeModel":
+        """Analytic model for the simulator: each extra item in a batch adds
+        `marginal` of the single-item stage time (GPU batching amortizes
+        weight loads, so marginal << 1)."""
+        buckets = tuple(sorted(int(b) for b in buckets))
+        rows = tuple(
+            tuple(float(t) * (1.0 + marginal * (b - 1)) for t in stage_times)
+            for b in buckets)
+        return cls(buckets=buckets, times=rows)
+
+    @classmethod
+    def from_profile(cls, matrix, buckets) -> "BatchTimeModel":
+        """From a profiled (num_stages, num_buckets) WCET matrix (see
+        repro.serving.batch.stage_fns.profile_batched_stages)."""
+        m = np.asarray(matrix, dtype=float)
+        buckets = tuple(sorted(int(b) for b in buckets))
+        if m.shape != (m.shape[0], len(buckets)):
+            raise ValueError(f"expected (L, {len(buckets)}) matrix, "
+                             f"got {m.shape}")
+        rows = tuple(tuple(float(x) for x in m[:, bi])
+                     for bi in range(len(buckets)))
+        return cls(buckets=buckets, times=rows)
+
+
+class StageBatcher:
+    """Greedy deadline-feasible micro-batch formation at one stage.
+
+    Given the leader the base policy picked, fill the rest of the bucket
+    with co-runners currently at the *same* stage, in `rank` order,
+    admitting a candidate only if the grown batch's (bucket-rounded) WCET
+    still meets every member's deadline — including the candidate's own.
+
+    If even the leader alone is infeasible the singleton batch is returned
+    unchanged; dispatch semantics then match the unbatched engine (the
+    stage runs, the deadline check afterwards decides whether it counted).
+    """
+
+    def __init__(self, time_model: BatchTimeModel, max_batch: int = None):
+        self.time_model = time_model
+        self.max_batch = min(max_batch or time_model.max_batch,
+                             time_model.max_batch)
+
+    def form(self, leader, candidates, now: float, rank=None) -> list:
+        stage = leader.executed
+        batch = [leader]
+        if not leader.fits_batch(now, self.time_model.wcet(stage, 1)):
+            return batch
+        cands = [c for c in candidates
+                 if c is not leader and c.executed == stage]
+        cands.sort(key=rank if rank is not None
+                   else (lambda t: (t.deadline, t.tid)))
+        for c in cands:
+            if len(batch) >= self.max_batch:
+                break
+            w = self.time_model.wcet(stage, len(batch) + 1)
+            if c.fits_batch(now, w) and all(m.fits_batch(now, w)
+                                            for m in batch):
+                batch.append(c)
+        return batch

@@ -19,9 +19,8 @@ non-preemptible region) before it reaches the scheduler.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -67,8 +66,10 @@ def profile_stages(cfg, params, stage_fns, sample_inputs, *, n_runs: int = 100,
     """Per-stage WCET = `percentile` of `n_runs` timed executions (paper:
     99% CI upper bound over profiling runs on training data).
 
-    Also measures the host dispatch overhead (time around a no-op jit call)
-    used for the §II-B deadline adjustment.
+    Also measures the host dispatch overhead (round-trip time of a no-op jit
+    call) used for the §II-B deadline adjustment.  Returns
+    ``(wcet, times, host_overhead)``; pass the overhead straight into
+    ``ServingEngine(host_overhead=...)``.
     """
     times = np.zeros((cfg.num_stages, n_runs))
     h = sample_inputs
@@ -82,7 +83,26 @@ def profile_stages(cfg, params, stage_fns, sample_inputs, *, n_runs: int = 100,
             times[s, i] = time.perf_counter() - t0
         h = out[0]
     wcet = np.percentile(times, percentile, axis=1)
-    return wcet, times
+    host_overhead = profile_host_overhead(n_runs=n_runs,
+                                          percentile=percentile)
+    return wcet, times, host_overhead
+
+
+def profile_host_overhead(*, n_runs: int = 100,
+                          percentile: float = 99.0) -> float:
+    """Host dispatch overhead: round-trip of a no-op jitted call (§II-B).
+
+    This is the per-dispatch CPU cost the engine pays before the accelerator
+    starts a stage, so the caller-visible deadline is shrunk by it."""
+    noop = jax.jit(lambda x: x)
+    z = np.zeros((), np.float32)
+    jax.block_until_ready(noop(z))                 # compile
+    samples = np.zeros(n_runs)
+    for i in range(n_runs):
+        t0 = time.perf_counter()
+        jax.block_until_ready(noop(z))
+        samples[i] = time.perf_counter() - t0
+    return float(np.percentile(samples, percentile))
 
 
 class ServingEngine:

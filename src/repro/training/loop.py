@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.models import exits as exits_lib
 from repro.models import forward
-from repro.models.model import apply_layer, embed_one, Sig
+from repro.models.model import apply_layer, Sig
 
 MTP_WEIGHT = 0.3
 

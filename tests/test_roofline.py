@@ -1,6 +1,5 @@
 """Roofline machinery tests: HLO collective parser, probe fit math, and the
 table row computation."""
-import numpy as np
 import pytest
 
 from repro.roofline.collectives import collective_bytes_from_hlo

@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import init_params
@@ -166,7 +165,7 @@ def test_serving_engine_end_to_end(rng):
     test = ds.sample(40, seed=9)
     fns = make_stage_fns(cfg)
     sample = jax.tree.map(lambda x: x[:1], test["inputs"])
-    wcet, _ = profile_stages(cfg, params, fns, sample, n_runs=5)
+    wcet, _, _ = profile_stages(cfg, params, fns, sample, n_runs=5)
     pol = RTDeepIoT(make_predictor("exp", prior_curve=[.5, .7, .85]))
     # paper-like ratio: relative deadlines are many multiples of one stage
     # (their GPU stages ~10-25ms vs 10-300ms deadlines); our CPU stages are
@@ -195,7 +194,7 @@ def test_serving_engine_tight_deadlines_shed_stages(rng):
     test = ds.sample(40, seed=9)
     fns = make_stage_fns(cfg)
     sample = jax.tree.map(lambda x: x[:1], test["inputs"])
-    wcet, _ = profile_stages(cfg, params, fns, sample, n_runs=5)
+    wcet, _, _ = profile_stages(cfg, params, fns, sample, n_runs=5)
     pol = RTDeepIoT(make_predictor("exp", prior_curve=[.5, .7, .85]))
     stream = closed_loop_stream(test["inputs"], test["labels"], n_clients=6,
                                 d_lo=float(3.5 * wcet.max()),

@@ -1,10 +1,8 @@
 """End-to-end behaviour tests for the paper's system: train a tiny anytime
 model, verify confidence/utility structure, and validate the headline
 scheduling claim (RTDeepIoT >= baselines) on the resulting oracle tables."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
