@@ -120,6 +120,15 @@ def main(argv=None):
         results[f"batched-{name}"] = report(f"batched-{name}",
                                             eng.run(stream()),
                                             eng.policy.sched_time)
+    # pipelined async dispatch (repro.serving.runtime): the host pre-selects
+    # the next batch while the device executes the current one
+    for name, policy in policies():
+        eng = BatchedServingEngine(cfg, params, policy,
+                                   time_model=time_model, stage_fns=bfns,
+                                   host_overhead=host_overhead).pipelined()
+        results[f"pipelined-{name}"] = report(f"pipelined-{name}",
+                                              eng.run(stream()),
+                                              eng.policy.sched_time)
     return results
 
 

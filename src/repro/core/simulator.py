@@ -11,16 +11,15 @@ Deadline-miss semantics follow the paper: a request fails iff *no* stage
 completed before its deadline; otherwise the last in-time exit's prediction
 is the result.  Scheduler wall time can optionally be charged to the
 simulated clock (overhead experiments, Fig. 13 analog).
+
+``simulate`` is a compatibility shim over the unified runtime
+(``repro.serving.runtime``): an ``EngineCore`` on a ``VirtualClock`` with
+an ``OracleExecutor`` whose time model has a single batch bucket — every
+dispatch is a singleton batch, i.e. exactly the paper's Fig. 2 loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Optional
-
-import numpy as np
-
-from repro.core.task import Task
 
 
 @dataclasses.dataclass
@@ -44,6 +43,13 @@ class SimResult:
     per_request: list
     makespan: float = 0.0          # simulated seconds until the last event
     throughput: float = 0.0        # completed (non-missed) requests / second
+    # unified host-cost accounting (repro.serving.runtime) ------------------
+    sched_charged: float = 0.0     # all host scheduling cost incurred
+    host_serial: float = 0.0       # the part that serialized with the device
+    host_overhead_frac: float = 0.0   # host_serial / (busy + host_serial)
+    n_dispatches: int = 0
+    presel_hits: int = 0           # pipelined dispatch: pre-selections kept
+    presel_misses: int = 0         # ... re-planned at dispatch time
 
     def row(self):
         return dict(accuracy=self.accuracy, miss_rate=self.miss_rate,
@@ -56,131 +62,18 @@ def simulate(policy, workload: Workload, stage_times, conf_table,
              dispatch_overhead: float = 0.0) -> SimResult:
     """stage_times: (L,) profiled WCETs; conf_table/correct_table:
     (n_samples, L) oracle outputs per test sample per stage."""
-    rng = np.random.default_rng(workload.seed)
-    n_samples, L = conf_table.shape
-    stage_times = tuple(float(x) for x in stage_times)
+    # imported here: repro.core stays importable without pulling the serving
+    # package at module-import time (the runtime imports SimResult from us)
+    from repro.serving.batch.batcher import BatchTimeModel
+    from repro.serving.batch.policy import as_batch_policy
+    from repro.serving.runtime import simulate_runtime
 
-    sample_order = rng.permutation(n_samples)
-    issued = 0
-
-    def new_task(client, now):
-        nonlocal issued
-        if issued >= workload.n_requests:
-            return None
-        rel = rng.uniform(workload.d_lo, workload.d_hi)
-        t = Task(arrival=now, deadline=now + rel, stage_times=stage_times,
-                 mandatory=workload.mandatory_stages,
-                 sample=int(sample_order[issued % n_samples]), client=client)
-        issued += 1
-        return t
-
-    now = 0.0
-    active: list = []
-    finished: list = []
-    # each client: issue first request at a small random offset
-    events = []  # (time, seq, kind, payload)
-    seq = 0
-    for c in range(workload.n_clients):
-        t0 = float(rng.uniform(0, workload.d_lo))
-        heapq.heappush(events, (t0, seq, "issue", c))
-        seq += 1
-
-    running: Optional[tuple] = None      # (task, finish_time)
-    total_busy = 0.0
-    sched_charged = 0.0
-
-    def retire(task, now):
-        """Move a finished/expired task out of the active set."""
-        active.remove(task)
-        depth = task.executed
-        # count only stages that finished before the deadline — the Task's
-        # executed counter is only advanced for in-time completions below
-        missed = depth == 0
-        correct = (not missed) and bool(correct_table[task.sample, depth - 1])
-        conf = float(conf_table[task.sample, depth - 1]) if depth else 0.0
-        finished.append(dict(tid=task.tid, missed=missed, correct=correct,
-                             depth=depth, conf=conf, client=task.client,
-                             deadline=task.deadline, arrival=task.arrival))
-        # closed loop: the client reissues at *completion* time — a request
-        # that finishes early frees its client immediately (an expired one
-        # retires at its deadline, so `now` is correct in both cases)
-        heapq.heappush(events, (now, -task.tid, "issue", task.client))
-
-    def charge(dt):
-        nonlocal now, sched_charged
-        sched_charged += dt
-        if charge_overhead:
-            now += dt
-
-    while events or running or any(t.executed < t.assigned_depth
-                                   for t in active):
-        # 1. dispatch if idle
-        if running is None:
-            # expire overdue tasks first
-            for t in list(active):
-                if t.deadline <= now:
-                    retire(t, now)
-            w0 = _wall()
-            nxt = policy.next_task(active, now)
-            charge(_wall() - w0 + (dispatch_overhead if nxt else 0.0))
-            if nxt is not None:
-                dur = nxt.stage_times[nxt.executed]
-                running = (nxt, now + dur)
-                total_busy += dur
-        # 2. advance to next event
-        next_event_t = events[0][0] if events else np.inf
-        finish_t = running[1] if running else np.inf
-        if not np.isfinite(min(next_event_t, finish_t)):
-            break
-        if finish_t <= next_event_t:
-            now = finish_t
-            task, _ = running
-            running = None
-            if task.deadline >= now - 1e-12:
-                task.executed += 1
-                task.confidences.append(
-                    float(conf_table[task.sample, task.executed - 1]))
-                w0 = _wall()
-                policy.on_stage_done(active, task, now)
-                charge(_wall() - w0)
-            if task in active and (task.executed >= task.assigned_depth
-                                   or task.deadline <= now):
-                retire(task, now)
-        else:
-            now = next_event_t
-            _, _, kind, client = heapq.heappop(events)
-            if kind == "issue":
-                t = new_task(client, now)
-                if t is not None:
-                    active.append(t)
-                    w0 = _wall()
-                    policy.on_arrival(active, t, now)
-                    charge(_wall() - w0)
-
-    # drain any still-active tasks (simulation ended)
-    makespan = now
-    for t in list(active):
-        tend = max(now, t.deadline)
-        makespan = max(makespan, tend)
-        retire(t, tend)
-
-    n = len(finished)
-    acc = float(np.mean([f["correct"] for f in finished])) if n else 0.0
-    miss = float(np.mean([f["missed"] for f in finished])) if n else 0.0
-    depth = float(np.mean([f["depth"] for f in finished if not f["missed"]])
-                  ) if n else 0.0
-    conf = float(np.mean([f["conf"] for f in finished if not f["missed"]])
-                 ) if n else 0.0
-    denom = total_busy + policy.sched_time
-    ok = sum(1 for f in finished if not f["missed"])
-    return SimResult(accuracy=acc, miss_rate=miss, mean_depth=depth,
-                     mean_conf=conf,
-                     overhead_frac=policy.sched_time / denom if denom else 0.0,
-                     n_requests=n, per_request=finished,
-                     makespan=makespan,
-                     throughput=ok / makespan if makespan > 0 else 0.0)
-
-
-def _wall():
-    import time
-    return time.perf_counter()
+    tm = BatchTimeModel.linear(tuple(float(x) for x in stage_times),
+                               buckets=(1,))
+    # charge_formation=False: the legacy loop never billed next_task time
+    # to policy.sched_time (overhead_frac counts only the policies' own
+    # planning hooks), and neither does this shim
+    pol = as_batch_policy(policy, tm, max_batch=1, charge_formation=False)
+    return simulate_runtime(pol, workload, tm, conf_table, correct_table,
+                            charge_overhead=charge_overhead,
+                            dispatch_overhead=dispatch_overhead, max_batch=1)

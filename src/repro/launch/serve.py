@@ -6,6 +6,12 @@ below a target — a deadline-free confidence-driven variant of RTDeepIoT's
 depth assignment (with --deadline-ms the FPTAS scheduler governs depth across
 the batch exactly as in serving).
 
+``--pipeline`` applies the serving runtime's async-dispatch idea at token
+granularity: the next-deeper decode step is dispatched (XLA async) *before*
+blocking on the current depth's confidence readback, so the host's
+read-and-decide overlaps device compute; a speculatively dispatched depth
+is simply discarded when the confidence target was already met.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 24
 """
 from __future__ import annotations
@@ -29,6 +35,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--conf-target", type=float, default=0.7)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="speculatively dispatch the next-deeper step "
+                         "before reading the current confidence (async "
+                         "host/device overlap)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -48,15 +58,31 @@ def main(argv=None):
     tok = (jnp.zeros((B, cfg.num_codebooks), jnp.int32)
            if cfg.modality == "audio_stub" else jnp.zeros((B,), jnp.int32))
     depth_hist = np.zeros(n_stages, np.int64)
+    speculated = 0
     t0 = time.time()
     for t in range(args.tokens):
         pos = jnp.full((B,), t, jnp.int32)
-        # anytime decode: run deeper only while mean confidence < target
-        for d in range(1, n_stages + 1):
-            out, new_cache = steps[d - 1](params, cache, tok, pos)
-            conf = float(jnp.mean(out.confidences[-1]))
-            if conf >= args.conf_target or d == n_stages:
-                break
+        if args.pipeline:
+            # async deepening: dispatch depth d+1 (XLA returns immediately)
+            # BEFORE blocking on depth d's confidence readback, so the
+            # host's read-and-decide hides behind device compute; the
+            # speculative step is discarded when the target was already met
+            outs = [steps[0](params, cache, tok, pos)]
+            for d in range(1, n_stages + 1):
+                if d < n_stages:
+                    outs.append(steps[d](params, cache, tok, pos))
+                conf = float(jnp.mean(outs[d - 1][0].confidences[-1]))
+                if conf >= args.conf_target or d == n_stages:
+                    out, new_cache = outs[d - 1]
+                    speculated += int(d < n_stages)
+                    break
+        else:
+            # anytime decode: run deeper only while mean confidence < target
+            for d in range(1, n_stages + 1):
+                out, new_cache = steps[d - 1](params, cache, tok, pos)
+                conf = float(jnp.mean(out.confidences[-1]))
+                if conf >= args.conf_target or d == n_stages:
+                    break
         depth_hist[d - 1] += 1
         cache = new_cache
         nxt = jnp.argmax(out.logits[-1], -1).astype(jnp.int32)
@@ -65,6 +91,9 @@ def main(argv=None):
                              (B, cfg.num_codebooks))
         print(f"token {t:3d}: depth={d} conf={conf:.3f}")
     dt = time.time() - t0
+    if args.pipeline:
+        print(f"pipelined decode: {speculated} speculative deeper steps "
+              f"dispatched and discarded")
     print(f"\n{args.tokens} tokens in {dt:.1f}s; depth histogram "
           f"{depth_hist.tolist()} (mean {np.average(np.arange(1, n_stages+1), weights=depth_hist):.2f} "
           f"of {n_stages}) — stages shed: "

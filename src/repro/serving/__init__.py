@@ -6,10 +6,15 @@ from repro.serving.batch import (AdmissionController, BatchedPolicy,
                                  BatchPolicy, BatchTimeModel, StageBatcher,
                                  as_batch_policy, pad_batch,
                                  profile_batched_stages, simulate_batched)
+from repro.serving.runtime import (ClosedLoopSource, EngineCore,
+                                   OracleExecutor, StreamSource, TableRecorder,
+                                   VirtualClock, WallClock, simulate_runtime)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
            "AdmissionController", "BatchedPolicy", "BatchedServingEngine",
            "BatchedStageFns", "BatchPolicy", "BatchTimeModel",
            "StageBatcher", "as_batch_policy", "pad_batch",
-           "profile_batched_stages", "simulate_batched"]
+           "profile_batched_stages", "simulate_batched",
+           "ClosedLoopSource", "EngineCore", "OracleExecutor", "StreamSource",
+           "TableRecorder", "VirtualClock", "WallClock", "simulate_runtime"]

@@ -127,6 +127,10 @@ class StageBatcher:
     def form(self, leader, candidates, now: float, rank=None) -> list:
         stage = leader.executed
         batch = [leader]
+        # singleton fast path (the unbatched engines run max_batch=1 through
+        # the same code): no candidate ranking work on the dispatch hot path
+        if self.max_batch <= 1:
+            return batch
         if not leader.fits_batch(now, self.time_model.wcet(stage, 1)):
             return batch
         cands = [c for c in candidates

@@ -17,20 +17,27 @@ unit is a *padded, shape-bucketed batch* of same-stage tasks:
 
 Every bucketed shape is compiled in warm-up, so steady state never
 recompiles.
+
+``run`` is a compatibility shim over the unified runtime
+(``repro.serving.runtime``): an ``EngineCore`` on a ``WallClock`` with a
+``DeviceExecutor`` over the bucketed batched stage functions.  Because the
+device executor dispatches asynchronously, ``pipelined()`` returns an
+engine whose core pre-selects the next batch while the current one runs
+(``pipeline_depth=2``) — the host/device overlap the ROADMAP's async item
+asks for — without changing this class's legacy constructor or ``run``
+signature.
 """
 from __future__ import annotations
-
-import time
-
-import jax
-import numpy as np
 
 from repro.core.task import Task
 from repro.serving.batch.admission import AdmissionController
 from repro.serving.batch.batcher import BatchTimeModel
 from repro.serving.batch.policy import BatchPolicy, as_batch_policy
 from repro.serving.batch.stage_fns import BatchedStageFns
-from repro.serving.engine import Request, Response
+from repro.serving.engine import Request
+from repro.serving.runtime import (EngineCore, ResponseRecorder, StreamSource,
+                                   WallClock)
+from repro.serving.runtime.device import DeviceExecutor
 
 
 class BatchedServingEngine:
@@ -52,44 +59,25 @@ class BatchedServingEngine:
         self.admission = admission
         self.host_overhead = host_overhead
         self.responses: list = []
-        self._active: list = []
-        self._states: dict = {}     # tid -> [request, hidden/inputs, result]
+        self._pipeline_depth = 1
+
+    def pipelined(self, depth: int = 2) -> "BatchedServingEngine":
+        """Enable pipelined async dispatch (host pre-selects batch N+1 while
+        batch N runs on the device).  Returns self for chaining."""
+        self._pipeline_depth = depth
+        return self
 
     # ------------------------------------------------------------------
-    def _admit(self, req: Request, now: float):
+    def _make_task(self, req: Request, now: float) -> Task:
         # §II-B with batching: the non-preemptible region is one *batched*
         # stage, priced at the largest batch this engine will dispatch
         worst = max(self.time_model.wcet(s, self._effective_max_batch)
                     for s in range(self.cfg.num_stages))
         adj = self.host_overhead + worst
-        t = Task(arrival=now, deadline=req.arrival + req.rel_deadline - adj,
-                 stage_times=self.time_model.single_times(),
-                 mandatory=self.cfg.mandatory_stages, sample=req.sample,
-                 client=req.client)
-        if self.admission is not None:
-            dec = self.admission.apply(self._active, t, now)
-            if not dec.admitted:
-                self.responses.append(Response(req.sample, None, 0.0, 0,
-                                               True, now - req.arrival,
-                                               t.deadline))
-                return None
-        self._active.append(t)
-        self._states[t.tid] = [req, req.inputs, None]
-        self.policy.on_arrival(self._active, t, now)
-        return t
-
-    def _respond(self, task: Task, now: float):
-        req, _h, result = self._states.pop(task.tid)
-        self._active.remove(task)
-        if result is None:
-            self.responses.append(Response(task.sample, None, 0.0, 0,
-                                           True, now - req.arrival,
-                                           task.deadline))
-        else:
-            pred, conf = result
-            self.responses.append(Response(task.sample, int(pred),
-                                           float(conf), task.executed, False,
-                                           now - req.arrival, task.deadline))
+        return Task(arrival=now, deadline=req.arrival + req.rel_deadline - adj,
+                    stage_times=self.time_model.single_times(),
+                    mandatory=self.cfg.mandatory_stages, sample=req.sample,
+                    client=req.client)
 
     # ------------------------------------------------------------------
     def run(self, request_stream):
@@ -99,50 +87,18 @@ class BatchedServingEngine:
         pending.sort(key=lambda p: p[0])
         if pending:   # compile every (stage, bucket) before the clock starts
             self.stage_fns.warmup(self.params, pending[0][1].inputs)
-        t_start = time.perf_counter()
-        now = 0.0
-        i = 0
-        while i < len(pending) or self._active:
-            now = time.perf_counter() - t_start
-            while i < len(pending) and pending[i][0] <= now:
-                off, req = pending[i]
-                req.arrival = off
-                self._admit(req, now)
-                i += 1
-            for t in list(self._active):
-                if t.deadline <= now:
-                    self._respond(t, now)
-            nb = self.policy.next_batch(self._active, now)
-            if nb is None:
-                if i < len(pending):
-                    time.sleep(max(0.0, min(pending[i][0] - now, 0.005)))
-                    continue
-                if not self._active:
-                    break
-                time.sleep(0.0005)
-                continue
-            # run one batched stage (the non-preemptive unit)
-            stage, batch = nb
-            states = [self._states[t.tid] for t in batch]
-            h_out, logits, conf, _mask = self.stage_fns.run(
-                stage, self.params, [st[1] for st in states])
-            jax.block_until_ready(h_out)
-            logits = np.asarray(logits)
-            conf = np.asarray(conf)
-            now = time.perf_counter() - t_start
-            for k, (t, st) in enumerate(zip(batch, states)):
-                if t.deadline >= now:          # stage finished in time
-                    t.executed += 1
-                    c = float(np.max(conf[k]))
-                    t.confidences.append(c)
-                    lg = logits[k]
-                    pred = int(np.argmax(lg[0], -1)) if lg.ndim >= 2 \
-                        else int(np.argmax(lg))
-                    st[1] = jax.tree.map(lambda x: x[k:k + 1], h_out)
-                    st[2] = (pred, c)
-                    self.policy.on_stage_done(self._active, t, now)
-            for t in batch:
-                if t in self._active and (t.executed >= t.assigned_depth
-                                          or t.deadline <= now):
-                    self._respond(t, now)
+        executor = DeviceExecutor(self.stage_fns, self.params, self.time_model)
+
+        def admit(req, now):
+            t = self._make_task(req, now)
+            executor.register(t, req)
+            return t
+
+        core = EngineCore(self.policy, WallClock(), executor,
+                          StreamSource(pending, admit),
+                          ResponseRecorder(executor, self.responses),
+                          admission=self.admission,
+                          pipeline_depth=self._pipeline_depth,
+                          max_batch=self._effective_max_batch)
+        core.run()
         return self.responses

@@ -50,10 +50,15 @@ class BatchedPolicy(BatchPolicy):
     is charged to the base policy's ``sched_time``.
     """
 
-    def __init__(self, base: Policy, batcher: StageBatcher):
+    def __init__(self, base: Policy, batcher: StageBatcher,
+                 charge_formation: bool = True):
         # no super().__init__(): sched_time/invocations live on `base`
         self.base = base
         self.batcher = batcher
+        # the batched paths bill selection + batch formation to the base
+        # policy's sched_time; the unbatched shims pass False, preserving
+        # the legacy accounting where next_task time was never counted
+        self.charge_formation = charge_formation
         self.name = f"batched-{base.name}"
 
     def __getattr__(self, item):
@@ -77,19 +82,22 @@ class BatchedPolicy(BatchPolicy):
         t0 = time.perf_counter()
         leader = self.base.next_task(active, now)
         if leader is None:
-            self.base.sched_time += time.perf_counter() - t0
+            if self.charge_formation:
+                self.base.sched_time += time.perf_counter() - t0
             return None
         cands = self._runnable(active, now)
         batch = self.batcher.form(leader, cands, now,
                                   rank=lambda t: self.base.batch_rank(t, now))
-        self.base.sched_time += time.perf_counter() - t0
+        if self.charge_formation:
+            self.base.sched_time += time.perf_counter() - t0
         return leader.executed, batch
 
 
-def as_batch_policy(policy: Policy, time_model,
-                    max_batch: int = None) -> BatchPolicy:
+def as_batch_policy(policy: Policy, time_model, max_batch: int = None,
+                    charge_formation: bool = True) -> BatchPolicy:
     """Wrap a plain Policy for the batched engine/simulator (idempotent)."""
     if isinstance(policy, BatchPolicy):
         return policy
     return BatchedPolicy(policy, StageBatcher(time_model,
-                                              max_batch=max_batch))
+                                              max_batch=max_batch),
+                         charge_formation=charge_formation)

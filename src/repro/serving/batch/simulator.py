@@ -10,19 +10,17 @@ the wall-clock ``BatchedServingEngine`` pays).
 An optional ``AdmissionController`` runs at issue time; a rejected request
 counts as a miss (depth 0) and frees its client immediately — rejecting is
 a scheduling decision, not an accounting trick.
+
+``simulate_batched`` is a compatibility shim over the unified runtime
+(``repro.serving.runtime``) — the same ``EngineCore`` as ``simulate``,
+configured with the caller's batch time model; pipelined async dispatch
+is available through ``simulate_runtime(pipeline_depth=2)``.
 """
 from __future__ import annotations
 
-import heapq
-import time
-from typing import Optional
-
-import numpy as np
-
 from repro.core.simulator import SimResult, Workload
-from repro.core.task import Task
 from repro.serving.batch.batcher import BatchTimeModel
-from repro.serving.batch.policy import as_batch_policy
+from repro.serving.runtime.core import simulate_runtime
 
 
 def simulate_batched(policy, workload: Workload, time_model: BatchTimeModel,
@@ -34,132 +32,11 @@ def simulate_batched(policy, workload: Workload, time_model: BatchTimeModel,
 
     `policy` may be any single-task Policy (wrapped via ``as_batch_policy``)
     or a ready-made BatchPolicy."""
-    policy = as_batch_policy(policy, time_model, max_batch=max_batch)
-    rng = np.random.default_rng(workload.seed)
-    n_samples, L = conf_table.shape
+    L = conf_table.shape[1]
     if time_model.num_stages != L:
         raise ValueError(f"time model has {time_model.num_stages} stages, "
                          f"oracle tables have {L}")
-    single_times = time_model.single_times()
-
-    sample_order = rng.permutation(n_samples)
-    issued = 0
-
-    def new_task(client, now):
-        nonlocal issued
-        if issued >= workload.n_requests:
-            return None
-        rel = rng.uniform(workload.d_lo, workload.d_hi)
-        t = Task(arrival=now, deadline=now + rel, stage_times=single_times,
-                 mandatory=workload.mandatory_stages,
-                 sample=int(sample_order[issued % n_samples]), client=client)
-        issued += 1
-        return t
-
-    now = 0.0
-    active: list = []
-    finished: list = []
-    events = []                     # (time, seq, kind, payload)
-    seq = 0
-    for c in range(workload.n_clients):
-        t0 = float(rng.uniform(0, workload.d_lo))
-        heapq.heappush(events, (t0, seq, "issue", c))
-        seq += 1
-
-    running: Optional[tuple] = None      # ([tasks], finish_time)
-    total_busy = 0.0
-
-    def retire(task, now, rejected=False):
-        if task in active:
-            active.remove(task)
-        depth = task.executed
-        missed = depth == 0
-        correct = (not missed) and bool(correct_table[task.sample, depth - 1])
-        conf = float(conf_table[task.sample, depth - 1]) if depth else 0.0
-        finished.append(dict(tid=task.tid, missed=missed, correct=correct,
-                             depth=depth, conf=conf, client=task.client,
-                             deadline=task.deadline, arrival=task.arrival,
-                             rejected=rejected))
-        # closed loop: client reissues at completion/rejection time
-        heapq.heappush(events, (now, -task.tid, "issue", task.client))
-
-    def charge(dt):
-        nonlocal now
-        if charge_overhead:
-            now += dt
-
-    while events or running or any(t.executed < t.assigned_depth
-                                   for t in active):
-        # 1. dispatch a batch if the accelerator is idle
-        if running is None:
-            for t in list(active):
-                if t.deadline <= now:
-                    retire(t, now)
-            w0 = time.perf_counter()
-            nb = policy.next_batch(active, now)
-            charge(time.perf_counter() - w0
-                   + (dispatch_overhead if nb else 0.0))
-            if nb is not None:
-                stage, batch = nb
-                dur = time_model.wcet(stage, len(batch))
-                running = (batch, now + dur)
-                total_busy += dur
-        # 2. advance to the next event
-        next_event_t = events[0][0] if events else np.inf
-        finish_t = running[1] if running else np.inf
-        if not np.isfinite(min(next_event_t, finish_t)):
-            break
-        if finish_t <= next_event_t:
-            now = finish_t
-            batch, _ = running
-            running = None
-            for task in batch:
-                if task.deadline >= now - 1e-12:
-                    task.executed += 1
-                    task.confidences.append(
-                        float(conf_table[task.sample, task.executed - 1]))
-                    w0 = time.perf_counter()
-                    policy.on_stage_done(active, task, now)
-                    charge(time.perf_counter() - w0)
-            for task in batch:
-                if task in active and (task.executed >= task.assigned_depth
-                                       or task.deadline <= now):
-                    retire(task, now)
-        else:
-            now = next_event_t
-            _, _, kind, client = heapq.heappop(events)
-            if kind == "issue":
-                t = new_task(client, now)
-                if t is None:
-                    continue
-                if admission is not None:
-                    dec = admission.apply(active, t, now)
-                    if not dec.admitted:
-                        retire(t, now, rejected=True)
-                        continue
-                active.append(t)
-                w0 = time.perf_counter()
-                policy.on_arrival(active, t, now)
-                charge(time.perf_counter() - w0)
-
-    makespan = now
-    for t in list(active):
-        tend = max(now, t.deadline)
-        makespan = max(makespan, tend)
-        retire(t, tend)
-
-    n = len(finished)
-    acc = float(np.mean([f["correct"] for f in finished])) if n else 0.0
-    miss = float(np.mean([f["missed"] for f in finished])) if n else 0.0
-    depth = float(np.mean([f["depth"] for f in finished if not f["missed"]])
-                  ) if n else 0.0
-    conf = float(np.mean([f["conf"] for f in finished if not f["missed"]])
-                 ) if n else 0.0
-    denom = total_busy + policy.sched_time
-    ok = sum(1 for f in finished if not f["missed"])
-    return SimResult(accuracy=acc, miss_rate=miss, mean_depth=depth,
-                     mean_conf=conf,
-                     overhead_frac=policy.sched_time / denom if denom else 0.0,
-                     n_requests=n, per_request=finished,
-                     makespan=makespan,
-                     throughput=ok / makespan if makespan > 0 else 0.0)
+    return simulate_runtime(policy, workload, time_model, conf_table,
+                            correct_table, charge_overhead=charge_overhead,
+                            dispatch_overhead=dispatch_overhead,
+                            admission=admission, max_batch=max_batch)

@@ -15,6 +15,11 @@ exit when a task completes its assigned depth or its deadline expires.
 Deadline adjustment (§II-B): the caller-visible deadline is reduced by the
 profiled host/dispatch overhead and one worst-case stage time (the
 non-preemptible region) before it reaches the scheduler.
+
+``run`` is a compatibility shim over the unified runtime
+(``repro.serving.runtime``): an ``EngineCore`` on a ``WallClock`` with a
+``DeviceExecutor`` over the per-stage jitted functions, dispatching
+singleton batches (``max_batch=1``).
 """
 from __future__ import annotations
 
@@ -49,7 +54,7 @@ class Response:
     deadline: float
 
 
-def make_stage_fns(cfg, *, batch_size: int = 1):
+def make_stage_fns(cfg):
     """Jitted per-stage functions: stage 0 embeds raw inputs, later stages
     consume hidden states.  Returns list of fn(params, x) -> (h, logits,
     conf)."""
@@ -115,39 +120,27 @@ class ServingEngine:
         self.stage_wcet = tuple(float(x) for x in stage_wcet)
         self.host_overhead = host_overhead
         self.responses: list = []
-        self._active: list = []
-        self._states: dict = {}     # tid -> (request, hidden/inputs, results)
 
     # ------------------------------------------------------------------
-    def _admit(self, req: Request, now: float):
+    def _make_task(self, req: Request, now: float) -> Task:
         # §II-B deadline adjustment: CPU overhead + one non-preemptive stage
         adj = self.host_overhead + max(self.stage_wcet)
-        t = Task(arrival=now, deadline=req.arrival + req.rel_deadline - adj,
-                 stage_times=self.stage_wcet,
-                 mandatory=self.cfg.mandatory_stages, sample=req.sample,
-                 client=req.client)
-        self._active.append(t)
-        self._states[t.tid] = [req, req.inputs, None]   # None = no exit yet
-        self.policy.on_arrival(self._active, t, now)
-        return t
-
-    def _respond(self, task: Task, now: float):
-        req, _h, result = self._states.pop(task.tid)
-        self._active.remove(task)
-        if result is None:
-            self.responses.append(Response(task.sample, None, 0.0, 0,
-                                           True, now - req.arrival,
-                                           task.deadline))
-        else:
-            pred, conf = result
-            self.responses.append(Response(task.sample, int(pred),
-                                           float(conf), task.executed, False,
-                                           now - req.arrival, task.deadline))
+        return Task(arrival=now, deadline=req.arrival + req.rel_deadline - adj,
+                    stage_times=self.stage_wcet,
+                    mandatory=self.cfg.mandatory_stages, sample=req.sample,
+                    client=req.client)
 
     # ------------------------------------------------------------------
     def run(self, request_stream):
         """request_stream: iterable of (offset_seconds, Request), offsets
         non-decreasing relative to engine start."""
+        from repro.serving.batch.batcher import BatchTimeModel
+        from repro.serving.batch.policy import as_batch_policy
+        from repro.serving.runtime import (EngineCore, ResponseRecorder,
+                                           StreamSource, WallClock)
+        from repro.serving.runtime.device import (DeviceExecutor,
+                                                  SingleStageFns)
+
         pending = list(request_stream)
         pending.sort(key=lambda p: p[0])
         # warm-up: compile every stage before the clock starts (deadlines are
@@ -158,47 +151,22 @@ class ServingEngine:
                 out = fn(self.params, h)
                 jax.block_until_ready(out[0])
                 h = out[0]
-        t_start = time.perf_counter()
-        now = 0.0
-        i = 0
-        while i < len(pending) or self._active:
-            now = time.perf_counter() - t_start
-            # admit everything that has arrived
-            while i < len(pending) and pending[i][0] <= now:
-                off, req = pending[i]
-                req.arrival = off
-                self._admit(req, now)
-                i += 1
-            # retire expired
-            for t in list(self._active):
-                if t.deadline <= now:
-                    self._respond(t, now)
-            nxt = self.policy.next_task(self._active, now)
-            if nxt is None:
-                if i < len(pending):
-                    time.sleep(max(0.0, min(pending[i][0] - now, 0.005)))
-                    continue
-                if not self._active:
-                    break
-                time.sleep(0.0005)
-                continue
-            # run one stage (non-preemptive)
-            s = nxt.executed
-            _, h, _ = self._states[nxt.tid]
-            h_out, logits, conf = self.stage_fns[s](self.params, h)
-            jax.block_until_ready(h_out)
-            now = time.perf_counter() - t_start
-            if nxt.deadline >= now:                 # stage finished in time
-                nxt.executed += 1
-                nxt.confidences.append(float(np.max(conf)))
-                pred = int(np.argmax(np.asarray(logits)[0], -1)) \
-                    if np.ndim(logits) >= 2 else int(np.argmax(logits))
-                self._states[nxt.tid][1] = h_out
-                self._states[nxt.tid][2] = (pred, float(np.max(conf)))
-                self.policy.on_stage_done(self._active, nxt, now)
-            if nxt in self._active and (nxt.executed >= nxt.assigned_depth
-                                        or nxt.deadline <= now):
-                self._respond(nxt, now)
+        tm = BatchTimeModel.linear(self.stage_wcet, buckets=(1,))
+        executor = DeviceExecutor(SingleStageFns(self.stage_fns), self.params,
+                                  tm)
+
+        def admit(req, now):
+            t = self._make_task(req, now)
+            executor.register(t, req)
+            return t
+
+        # charge_formation=False: the legacy engine never billed next_task
+        # time to policy.sched_time (it holds only the policies' own hooks)
+        core = EngineCore(as_batch_policy(self.policy, tm, max_batch=1,
+                                          charge_formation=False),
+                          WallClock(), executor, StreamSource(pending, admit),
+                          ResponseRecorder(executor, self.responses))
+        core.run()
         return self.responses
 
 

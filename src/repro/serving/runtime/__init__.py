@@ -1,0 +1,57 @@
+"""Unified async event-driven serving runtime (one loop, four faces).
+
+``EngineCore`` is the single implementation of the paper's user-space
+scheduling loop — admit → expire → dispatch → observe → retire, §II-B
+deadline semantics, admission control, closed-loop reissue, and result
+aggregation — parameterized along three axes:
+
+=====================  ========================  =========================
+axis                   discrete-event            wall clock
+=====================  ========================  =========================
+Clock                  ``VirtualClock``          ``WallClock``
+Executor               ``OracleExecutor``        ``DeviceExecutor``
+                       (conf/correct tables +    (jitted stage fns,
+                       ``BatchTimeModel``)       async XLA dispatch)
+RequestSource          ``ClosedLoopSource``      ``StreamSource``
+                       (K clients, §IV)          ((offset, Request) list)
+=====================  ========================  =========================
+
+Legacy entry points are thin configurations of the core (all public
+signatures unchanged):
+
+* ``repro.core.simulate``            → ``simulate_runtime`` with a
+  single-bucket ``BatchTimeModel.linear(stage_times, (1,))`` and
+  ``max_batch=1`` (every dispatch is a singleton batch).
+* ``repro.serving.batch.simulate_batched`` → ``simulate_runtime`` with the
+  caller's time model / admission controller / ``max_batch``.
+* ``repro.serving.ServingEngine.run``      → ``EngineCore(WallClock,
+  DeviceExecutor(SingleStageFns), StreamSource, max_batch=1)``.
+* ``repro.serving.batch.BatchedServingEngine.run`` → ``EngineCore(
+  WallClock, DeviceExecutor(BatchedStageFns), StreamSource)``.
+
+Runtime-only capabilities on top of the unified core:
+
+* ``pipeline_depth=2`` — pipelined async dispatch: the host pre-selects
+  batch *N+1* while batch *N* runs on the device, re-validating deadline
+  feasibility at true dispatch time (see ``EngineCore._revalidate``).
+* ``policy_cost`` — deterministic per-invocation host-cost model, so
+  charged-overhead comparisons are reproducible.
+* unified host-cost accounting (``sched_charged`` / ``host_serial`` /
+  ``host_overhead_frac`` / ``n_dispatches`` on ``SimResult``) on every
+  path, fixing the legacy ``simulate_batched`` dropping charged time.
+
+``DeviceExecutor`` lives in ``repro.serving.runtime.device`` (imports jax);
+everything imported here is numpy-only so the simulators stay light.
+"""
+from repro.serving.runtime.clock import Clock, VirtualClock, WallClock
+from repro.serving.runtime.core import (EngineCore, ResponseRecorder,
+                                        TableRecorder, simulate_runtime)
+from repro.serving.runtime.executor import Executor, OracleExecutor
+from repro.serving.runtime.sources import (ClosedLoopSource, RequestSource,
+                                           StreamSource)
+
+__all__ = [
+    "Clock", "ClosedLoopSource", "EngineCore", "Executor", "OracleExecutor",
+    "RequestSource", "ResponseRecorder", "StreamSource", "TableRecorder",
+    "VirtualClock", "WallClock", "simulate_runtime",
+]

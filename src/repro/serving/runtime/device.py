@@ -1,0 +1,87 @@
+"""DeviceExecutor — real jitted stage functions behind the runtime core.
+
+``submit`` dispatches the batched stage *without* blocking (XLA dispatch is
+asynchronous), so with ``pipeline_depth=2`` the core pre-selects the next
+batch on the host while the device computes; ``complete`` blocks on the
+results and reads the wall clock for the completion time, exactly the
+instant the legacy engines stamped after ``block_until_ready``.
+
+Per-request state (input/hidden pytree, deepest in-time exit) lives here:
+the executor is the layer that owns device data, so the engines' old
+``_states`` dict moves in with it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+class SingleStageFns:
+    """Adapt the unbatched engine's per-stage ``fn(params, h)`` list to the
+    batched ``run(stage, params, pytrees)`` surface (batches of exactly 1)."""
+
+    def __init__(self, fns):
+        self.fns = fns
+
+    def run(self, stage: int, params, pytrees):
+        h, logits, conf = self.fns[stage](params, pytrees[0])
+        return h, logits, conf, np.ones(1, bool)
+
+
+class DeviceExecutor:
+    def __init__(self, stage_fns, params, time_model):
+        self.stage_fns = stage_fns      # object with .run(stage, params, [h])
+        self.params = params
+        self.time_model = time_model
+        self.total_busy = 0.0           # host-observed device-busy seconds
+        self.states: dict = {}          # tid -> [request, hidden/inputs, exit]
+        self._running = None
+        self._done = None
+
+    # -- request state -------------------------------------------------
+    def register(self, task, request) -> None:
+        self.states[task.tid] = [request, request.inputs, None]
+
+    def pop_state(self, task):
+        return self.states.pop(task.tid)
+
+    # -- Executor contract ---------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return self._running is not None
+
+    def wcet(self, stage: int, n: int) -> float:
+        return self.time_model.wcet(stage, n)
+
+    def submit(self, stage: int, tasks: list, now: float) -> None:
+        hs = [self.states[t.tid][1] for t in tasks]
+        h_out, logits, conf, _mask = self.stage_fns.run(stage, self.params, hs)
+        self._running = (stage, tasks, h_out, logits, conf, now)
+
+    def finish_time(self):
+        # real devices do not announce completion times — the core must
+        # block (None), unlike the oracle executor's known virtual finish
+        return None if self.busy else math.inf
+
+    def complete(self, clock):
+        stage, tasks, h_out, logits, conf, t0 = self._running
+        self._running = None
+        jax.block_until_ready(h_out)
+        self.total_busy += clock.now() - t0
+        self._done = (h_out, np.asarray(logits), np.asarray(conf))
+        return stage, tasks
+
+    def commit(self, task, k: int) -> float:
+        h_out, logits, conf = self._done
+        c = float(np.max(conf[k]))
+        lg = logits[k]
+        pred = int(np.argmax(lg[0], -1)) if lg.ndim >= 2 else int(np.argmax(lg))
+        st = self.states[task.tid]
+        st[1] = jax.tree.map(lambda x: x[k:k + 1], h_out)
+        st[2] = (pred, c)
+        return c
+
+    def running_tasks(self) -> list:
+        return list(self._running[1]) if self._running is not None else []

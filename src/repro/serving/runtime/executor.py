@@ -1,0 +1,98 @@
+"""Executor abstraction: *what actually runs* a dispatched stage batch.
+
+The runtime core dispatches non-preemptive ``(stage, [tasks])`` units and
+observes one confidence per in-time member.  Where those numbers come from
+is the executor's business:
+
+* ``OracleExecutor`` (here, numpy-only) — the discrete-event simulators'
+  device model: a batch of ``n`` at stage ``s`` occupies the device for
+  ``time_model.wcet(s, n)`` virtual seconds and each member's confidence
+  is read from the per-sample oracle table.
+* ``DeviceExecutor`` (``repro.serving.runtime.device``, jax) — real jitted
+  stage functions on the accelerator; completion time is whenever
+  ``block_until_ready`` returns on the wall clock.
+
+Contract (single in-flight batch — the device is one non-preemptive
+resource; pipelining overlaps *host* work with it, not device work with
+device work):
+
+    wcet(stage, n)            feasibility price of a batch of n
+    submit(stage, tasks, now) start the batch (must not block)
+    busy                      a batch is in flight
+    finish_time()             known completion time, +inf when idle, or
+                              ``None`` when only blocking can tell (wall)
+    complete(clock)           finish the in-flight batch; advances/reads
+                              the clock; returns (stage, tasks)
+    commit(task, k)           record member k's stage output (called only
+                              for members whose stage finished in time);
+                              returns the measured confidence
+"""
+from __future__ import annotations
+
+import math
+
+
+class Executor:
+    @property
+    def busy(self) -> bool:
+        raise NotImplementedError
+
+    def wcet(self, stage: int, n: int) -> float:
+        raise NotImplementedError
+
+    def submit(self, stage: int, tasks: list, now: float) -> None:
+        raise NotImplementedError
+
+    def finish_time(self):
+        raise NotImplementedError
+
+    def complete(self, clock) -> tuple:
+        raise NotImplementedError
+
+    def commit(self, task, k: int) -> float:
+        raise NotImplementedError
+
+    def running_tasks(self) -> list:
+        raise NotImplementedError
+
+
+class OracleExecutor(Executor):
+    """Virtual device over oracle tables and a ``BatchTimeModel``.
+
+    ``total_busy`` accumulates device-occupied virtual seconds (the
+    denominator of the paper's overhead fraction).
+    """
+
+    def __init__(self, time_model, conf_table):
+        self.time_model = time_model
+        self.conf_table = conf_table
+        self.total_busy = 0.0
+        self._running = None         # (stage, tasks, finish_time)
+
+    @property
+    def busy(self) -> bool:
+        return self._running is not None
+
+    def wcet(self, stage: int, n: int) -> float:
+        return self.time_model.wcet(stage, n)
+
+    def submit(self, stage: int, tasks: list, now: float) -> None:
+        dur = self.time_model.wcet(stage, len(tasks))
+        self.total_busy += dur
+        self._running = (stage, tasks, now + dur)
+
+    def finish_time(self):
+        return self._running[2] if self._running is not None else math.inf
+
+    def complete(self, clock) -> tuple:
+        stage, tasks, t_fin = self._running
+        self._running = None
+        clock.advance_to(t_fin)
+        return stage, tasks
+
+    def commit(self, task, k: int) -> float:
+        # called after task.executed was advanced for this stage
+        return float(self.conf_table[task.sample, task.executed - 1])
+
+    def running_tasks(self) -> list:
+        return list(self._running[1]) if self._running is not None else []
