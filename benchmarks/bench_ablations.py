@@ -18,7 +18,8 @@ import os
 
 import numpy as np
 
-from repro.core import RTDeepIoT, Workload, make_predictor, simulate
+from repro.core import RTDeepIoT, Workload, make_predictor
+from repro.serving import ServeSpec, Service
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 WL = dict(n_clients=20, d_lo=0.01, d_hi=0.3, n_requests=500)
@@ -45,8 +46,13 @@ class RTDeepIoTFullReplan(RTDeepIoT):
 
 
 def run(policy, conf, correct, **wl):
-    res = simulate(policy, Workload(**{**WL, **wl}), TIMES, conf, correct)
-    return res
+    # the ablation policies are ad-hoc subclasses, so they ride as a
+    # component *instance* resource; everything else is the declared spec
+    spec = ServeSpec(executor="oracle", clock="virtual", source="closed-loop",
+                     batching={"mode": "none", "stage_times": list(TIMES)})
+    return Service.from_spec(spec, policy=policy,
+                             workload=Workload(**{**WL, **wl}),
+                             conf_table=conf, correct_table=correct).run()
 
 
 def main():

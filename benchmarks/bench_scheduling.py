@@ -17,9 +17,14 @@ Figures reproduced (CPU-scale analog of CIFAR-10/ImageNet ResNet-3-stage):
            [extension; deterministic modeled host costs]
 
 All rows print as CSV (name,metric,value triples per configuration) and are
-also returned as dicts for EXPERIMENTS.md generation.  Inputs: the trained
-anytime classifier's oracle tables (artifacts/oracle_tables.npz, produced by
-examples/train_multiexit.py) + profiled stage WCETs.
+also returned as dicts (``SimResult.to_dict`` rows) for EXPERIMENTS.md
+generation.  Inputs: the trained anytime classifier's oracle tables
+(artifacts/oracle_tables.npz, produced by examples/train_multiexit.py) +
+profiled stage WCETs.
+
+Every engine is built through the public serving API: a declarative
+``ServeSpec`` (policy/executor/clock/source by registry key) run through
+``repro.serving.Service``.
 
 ``--smoke`` runs every figure on tiny workloads (synthetic oracle tables
 when the artifact is absent) without writing artifacts — the CI job that
@@ -33,11 +38,9 @@ import os
 
 import numpy as np
 
-from repro.core import EDF, LCF, RR, RTDeepIoT, Workload, make_predictor, simulate
-from repro.serving.batch.admission import AdmissionController
-from repro.serving.batch.batcher import DEFAULT_BUCKETS, BatchTimeModel
-from repro.serving.batch.simulator import simulate_batched
-from repro.serving.runtime import simulate_runtime
+from repro.core import Workload
+from repro.serving import ServeSpec, Service
+from repro.serving.batch.batcher import DEFAULT_BUCKETS
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
@@ -82,33 +85,46 @@ def _stage_times():
     return DEFAULT_STAGE_TIMES
 
 
-def _mk_policy(name, conf, delta=0.1):
-    prior = conf.mean(0)
-    if name in ("exp", "max", "lin"):
-        return RTDeepIoT(make_predictor(name, prior_curve=prior), delta=delta)
-    if name == "oracle":
-        return RTDeepIoT(make_predictor("oracle", oracle_table=conf),
-                         delta=delta)
-    return {"edf": EDF, "lcf": LCF, "rr": RR}[name]()
+def _policy_conf(name, delta=0.1):
+    """Registry (policy, policy_args) for a figure's policy label."""
+    if name in ("exp", "max", "lin", "oracle"):
+        return "rtdeepiot", {"predictor": name, "delta": delta}
+    return name, {}
+
+
+def _spec(policy_name, *, delta=0.1, batched=False, admission=None,
+          charge_overhead=False, dispatch_overhead=0.0, policy_cost=None,
+          pipeline_depth=1) -> ServeSpec:
+    """One place every figure's engine is declared: the ServeSpec."""
+    pol, pargs = _policy_conf(policy_name, delta)
+    batching = ({"buckets": list(DEFAULT_BUCKETS), "marginal": 0.15,
+                 "stage_times": list(_stage_times())} if batched
+                else {"mode": "none", "stage_times": list(_stage_times())})
+    return ServeSpec(policy=pol, policy_args=pargs, executor="oracle",
+                     clock="virtual", source="closed-loop",
+                     batching=batching, admission=admission or {},
+                     charge_overhead=charge_overhead,
+                     dispatch_overhead=dispatch_overhead,
+                     policy_cost=policy_cost, pipeline_depth=pipeline_depth)
+
+
+def _serve(spec, conf, correct, **wl_kwargs):
+    wl = Workload(**{**DEFAULTS, **wl_kwargs})
+    return Service.from_spec(spec, workload=wl, conf_table=conf,
+                             correct_table=correct).run()
 
 
 def _run(policy_name, conf, correct, *, delta=0.1, charge_overhead=False,
          **wl_kwargs):
-    wl = Workload(**{**DEFAULTS, **wl_kwargs})
-    pol = _mk_policy(policy_name, conf, delta)
-    res = simulate(pol, wl, _stage_times(), conf, correct,
-                   charge_overhead=charge_overhead)
-    return res
+    return _serve(_spec(policy_name, delta=delta,
+                        charge_overhead=charge_overhead),
+                  conf, correct, **wl_kwargs)
 
 
 def _emit(rows, fig, key, policy, res):
-    rows.append(dict(figure=fig, config=key, policy=policy,
-                     accuracy=round(res.accuracy, 4),
-                     miss_rate=round(res.miss_rate, 4),
-                     mean_depth=round(res.mean_depth, 3),
-                     overhead=round(res.overhead_frac, 4),
-                     host_frac=round(res.host_overhead_frac, 4),
-                     throughput=round(res.throughput, 2)))
+    row = {k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in res.to_dict().items() if not isinstance(v, dict)}
+    rows.append(dict(figure=fig, config=key, policy=policy, **row))
     print(f"{fig},{key},{policy},acc={res.accuracy:.4f},"
           f"miss={res.miss_rate:.4f},depth={res.mean_depth:.2f},"
           f"ovh={res.overhead_frac:.4f},thr={res.throughput:.1f}")
@@ -179,7 +195,6 @@ def fig_batch_throughput(conf, correct, ks=(16, 32, 64), n_requests=800):
     (each extra item costs 15% of the single-item stage time — conservative
     vs. measured GPU batch scaling).  Goodput = completed requests/s."""
     rows = []
-    tm = BatchTimeModel.linear(_stage_times(), DEFAULT_BUCKETS, marginal=0.15)
     speedups = {}
     for k in ks:
         wl_kwargs = dict(n_clients=k, n_requests=n_requests)
@@ -187,18 +202,15 @@ def fig_batch_throughput(conf, correct, ks=(16, 32, 64), n_requests=800):
             name = "rtdeepiot" if p == "exp" else p
             res_u = _run(p, conf, correct, **wl_kwargs)
             _emit(rows, "batch", f"K={k}", name, res_u)
-            wl = Workload(**{**DEFAULTS, **wl_kwargs})
-            pol = _mk_policy(p, conf)
-            res_b = simulate_batched(pol, wl, tm, conf, correct)
+            res_b = _serve(_spec(p, batched=True), conf, correct, **wl_kwargs)
             _emit(rows, "batch", f"K={k}", f"batched-{name}", res_b)
             speedups[(k, name)] = (res_b.throughput
                                    / max(res_u.throughput, 1e-9),
                                    res_b.accuracy - res_u.accuracy)
             # admission-controlled variant: fail fast under overload
-            pol = _mk_policy(p, conf)
-            res_a = simulate_batched(pol, wl, tm, conf, correct,
-                                     admission=AdmissionController(
-                                         tm, mode="depth_cap"))
+            res_a = _serve(_spec(p, batched=True,
+                                 admission={"mode": "depth_cap"}),
+                           conf, correct, **wl_kwargs)
             _emit(rows, "batch", f"K={k}", f"batched-{name}-admit", res_a)
     for (k, name), (sp, dacc) in sorted(speedups.items()):
         print(f"batch,K={k},{name},speedup={sp:.2f}x,acc_delta={dacc:+.4f}")
@@ -218,23 +230,21 @@ def fig_async_dispatch(conf, correct, ks=(16, 32, 64), n_requests=1200):
     behind device execution — charged host-overhead fraction drops at
     equal-or-better goodput/accuracy/miss."""
     rows = []
-    tm = BatchTimeModel.linear(_stage_times(), DEFAULT_BUCKETS, marginal=0.15)
     comp = {}
     for k in ks:
         # 1200+ requests: accuracy deltas between the two dispatch modes
         # are schedule-chaos noise at small n; this concentrates them
-        wl = Workload(**{**DEFAULTS, "n_clients": k,
-                         "n_requests": n_requests})
+        wl_kwargs = dict(n_clients=k, n_requests=n_requests)
         for p in ("exp", "edf"):
             name = "rtdeepiot" if p == "exp" else p
-            kw = dict(charge_overhead=True,
+            kw = dict(batched=True, charge_overhead=True,
                       dispatch_overhead=ASYNC_DISPATCH_OVERHEAD,
                       policy_cost=ASYNC_POLICY_COST)
-            res_s = simulate_runtime(_mk_policy(p, conf), wl, tm, conf,
-                                     correct, pipeline_depth=1, **kw)
+            res_s = _serve(_spec(p, pipeline_depth=1, **kw), conf, correct,
+                           **wl_kwargs)
             _emit(rows, "async", f"K={k}", f"sync-{name}", res_s)
-            res_a = simulate_runtime(_mk_policy(p, conf), wl, tm, conf,
-                                     correct, pipeline_depth=2, **kw)
+            res_a = _serve(_spec(p, pipeline_depth=2, **kw), conf, correct,
+                           **wl_kwargs)
             _emit(rows, "async", f"K={k}", f"pipelined-{name}", res_a)
             comp[(k, name)] = dict(
                 host_frac_sync=res_s.host_overhead_frac,

@@ -2,8 +2,8 @@
 
 1. Build a tiny anytime model (3 stages + exit heads + confidences).
 2. Cast inference requests as imprecise-computation Tasks.
-3. Plan depths with the FPTAS DP (Algorithm 1), compare against EDF in the
-   discrete-event simulator.
+3. Plan depths with the FPTAS DP (Algorithm 1), compare schedulers through
+   the one serving front door: a declarative ServeSpec run by Service.
 
 Usage: PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,9 +13,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (EDF, LCF, RR, DepthPlanner, RTDeepIoT, Task,
-                        Workload, make_predictor, simulate)
+from repro.core import DepthPlanner, Task, Workload, make_predictor
 from repro.models import forward, init_params
+from repro.serving import ServeSpec, Service
 
 # --- 1. an anytime model: every stage yields (prediction, confidence) ------
 cfg = get_config("anytime-classifier")
@@ -39,15 +39,19 @@ print("\nFPTAS depth assignment (Algorithm 1):",
       {t.tid: plan[t.tid] for t in tasks})
 
 # --- 3. schedulers head-to-head under overload -----------------------------
+# one front door for every engine: name the components in a ServeSpec
+# (registry keys), hand the runtime objects to Service as resources
 rng = np.random.default_rng(0)
 conf = np.clip(rng.uniform(0.35, 0.75, (300, 1))
                + rng.uniform(0.05, 0.25, (300, 3)).cumsum(1), 0, 1)
 correct = rng.uniform(size=(300, 3)) < conf
 wl = Workload(n_clients=16, d_lo=0.02, d_hi=0.18, n_requests=400)
 print("\npolicy       accuracy  miss_rate  mean_depth")
-for mk in (lambda: RTDeepIoT(make_predictor("exp", prior_curve=conf.mean(0))),
-           EDF, LCF, RR):
-    pol = mk()
-    r = simulate(pol, wl, [0.02] * 3, conf, correct)
-    print(f"{pol.name:12s} {r.accuracy:8.3f} {r.miss_rate:9.3f} "
+for policy in ("rtdeepiot", "edf", "lcf", "rr"):
+    spec = ServeSpec(policy=policy, executor="oracle", clock="virtual",
+                     source="closed-loop",
+                     batching={"mode": "none", "stage_times": [0.02] * 3})
+    r = Service.from_spec(spec, workload=wl, conf_table=conf,
+                          correct_table=correct).run()
+    print(f"{policy:12s} {r.accuracy:8.3f} {r.miss_rate:9.3f} "
           f"{r.mean_depth:10.2f}")

@@ -4,15 +4,20 @@ Loads the trained anytime classifier, profiles per-stage WCETs (99th
 percentile, paper §IV protocol) plus the host dispatch overhead, then
 serves requests from K concurrent clients under uniform-random relative
 deadlines with the RTDeepIoT scheduler vs. EDF, reporting accuracy / miss
-rate / latency from actual jitted stage executions on this host — on both
-the unbatched ServingEngine and the continuous micro-batching
-BatchedServingEngine (repro.serving.batch), whose per-bucket stage WCETs
-are profiled the same way.
+rate / latency from actual jitted stage executions on this host.
+
+Every engine is built through the public serving API: a declarative
+``ServeSpec`` names the policy / executor / clock / source by registry key
+(``device-single`` = unbatched per-stage dispatch, ``device-batched`` =
+continuous micro-batching, ``pipeline_depth=2`` = pipelined async
+dispatch), and ``repro.serving.Service`` owns the engine lifecycle; the
+model params / stage fns / profiled time model ride along as resources.
 
 Also writes artifacts/stage_times.npz so the simulation benchmarks use the
 profiled WCETs.
 
 Usage: PYTHONPATH=src python examples/serve_anytime.py [--requests 120]
+       PYTHONPATH=src python examples/serve_anytime.py --smoke   # CI job
 """
 from __future__ import annotations
 
@@ -23,10 +28,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import EDF, RTDeepIoT, make_predictor
 from repro.models import init_params
-from repro.serving import (BatchedServingEngine, BatchedStageFns,
-                           ServingEngine, closed_loop_stream, make_stage_fns,
+from repro.serving import (BatchedStageFns, ServeSpec, Service,
+                           closed_loop_stream, make_stage_fns,
                            profile_batched_stages, profile_stages)
 from repro.training import DifficultyDataset, checkpoint
 
@@ -44,7 +48,13 @@ def main(argv=None):
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8],
                     help="pre-compiled batch-size buckets for the batched "
                          "engine")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload, few profiling runs, no artifact "
+                         "writes (CI job)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.clients, args.buckets = 8, 2, [1, 2]
+    n_runs = 5 if args.smoke else 60
 
     cfg = get_config("anytime-classifier")
     ckpt_path = os.path.join(ART, "anytime_classifier.ckpt")
@@ -58,31 +68,33 @@ def main(argv=None):
         params = init_params(cfg, jax.random.PRNGKey(0))
 
     ds = DifficultyDataset(num_classes=cfg.vocab_size, seed=0)
-    test = ds.sample(600, seed=999)
+    test = ds.sample(80 if args.smoke else 600, seed=999)
 
     # --- profile stages (paper §IV: WCET = upper CI over profiling runs) ---
     stage_fns = make_stage_fns(cfg)
     sample = jax.tree.map(lambda x: x[:1], test["inputs"])
     wcet, times, host_overhead = profile_stages(cfg, params, stage_fns,
-                                                sample, n_runs=60)
+                                                sample, n_runs=n_runs)
     print("stage WCETs (s):", np.round(wcet, 5),
           " means:", np.round(times.mean(1), 5),
           f" host_overhead={host_overhead*1e6:.1f}us")
-    np.savez(os.path.join(ART, "stage_times.npz"), wcet=wcet, samples=times,
-             host_overhead=host_overhead)
+    if not args.smoke:
+        np.savez(os.path.join(ART, "stage_times.npz"), wcet=wcet,
+                 samples=times, host_overhead=host_overhead)
 
     # --- profile *batched* stage WCETs for the micro-batching engine ------
     buckets = tuple(sorted(args.buckets))
     bfns = BatchedStageFns(cfg, buckets)
     time_model, bmat = profile_batched_stages(cfg, params, bfns, sample,
-                                              n_runs=30)
+                                              n_runs=max(5, n_runs // 2))
     print("batched stage WCETs (s) [stage x bucket]:\n", np.round(bmat, 5))
 
     d_lo = args.d_lo or float(4.0 * wcet.max())
     d_hi = args.d_hi or float(14.0 * wcet.max())
     print(f"deadlines ~ U[{d_lo:.4f}, {d_hi:.4f}] s, {args.clients} clients")
 
-    def report(name, responses, sched_time):
+    def report(name, svc):
+        responses = svc.responses
         labels = np.asarray(test["labels"])
         correct = [r.prediction == labels[r.sample]
                    for r in responses if not r.missed]
@@ -93,7 +105,7 @@ def main(argv=None):
         lat = float(np.mean([r.latency for r in responses]))
         print(f"{name:18s} n={len(responses)} acc={acc:.3f} miss={miss:.3f} "
               f"mean_depth={depth:.2f} mean_latency={lat*1e3:.1f}ms "
-              f"sched_overhead={sched_time:.3f}s")
+              f"sched_overhead={svc.policy.sched_time:.3f}s")
         return dict(acc=acc, miss=miss, depth=depth)
 
     def stream():
@@ -102,33 +114,48 @@ def main(argv=None):
                                   d_hi=d_hi, n_requests=args.requests,
                                   seed=1)
 
-    def policies():
-        return [("rtdeepiot", RTDeepIoT(make_predictor(
-                    "exp", prior_curve=[.5, .7, .85]))),
-                ("edf", EDF())]
+    POLICIES = [("rtdeepiot", {"predictor": "exp",
+                               "prior_curve": [.5, .7, .85]}),
+                ("edf", {})]
+
+    def spec_for(policy, policy_args, *, batched, pipelined=False):
+        if batched:
+            batching = {}            # priced by the profiled time_model
+        else:
+            batching = {"mode": "none",
+                        "stage_times": [float(x) for x in wcet]}
+        return ServeSpec(
+            policy=policy, policy_args=policy_args,
+            executor="device-batched" if batched else "device-single",
+            clock="wall", source="stream", batching=batching,
+            host_overhead=host_overhead,
+            pipeline_depth=2 if pipelined else 1)
 
     results = {}
-    for name, policy in policies():
-        eng = ServingEngine(cfg, params, policy, stage_wcet=wcet,
-                            host_overhead=host_overhead)
-        results[name] = report(name, eng.run(stream()),
-                               eng.policy.sched_time)
-    for name, policy in policies():
-        eng = BatchedServingEngine(cfg, params, policy,
-                                   time_model=time_model, stage_fns=bfns,
-                                   host_overhead=host_overhead)
-        results[f"batched-{name}"] = report(f"batched-{name}",
-                                            eng.run(stream()),
-                                            eng.policy.sched_time)
-    # pipelined async dispatch (repro.serving.runtime): the host pre-selects
-    # the next batch while the device executes the current one
-    for name, policy in policies():
-        eng = BatchedServingEngine(cfg, params, policy,
-                                   time_model=time_model, stage_fns=bfns,
-                                   host_overhead=host_overhead).pipelined()
-        results[f"pipelined-{name}"] = report(f"pipelined-{name}",
-                                              eng.run(stream()),
-                                              eng.policy.sched_time)
+    for name, pargs in POLICIES:
+        svc = Service.from_spec(spec_for(name, pargs, batched=False),
+                                cfg=cfg, params=params, stage_fns=stage_fns)
+        svc.run(stream())
+        results[name] = report(name, svc)
+    for name, pargs in POLICIES:
+        svc = Service.from_spec(spec_for(name, pargs, batched=True),
+                                cfg=cfg, params=params, stage_fns=bfns,
+                                time_model=time_model)
+        svc.run(stream())
+        results[f"batched-{name}"] = report(f"batched-{name}", svc)
+    # pipelined async dispatch (pipeline_depth=2): the host pre-selects the
+    # next batch while the device executes the current one
+    for name, pargs in POLICIES:
+        svc = Service.from_spec(spec_for(name, pargs, batched=True,
+                                         pipelined=True),
+                                cfg=cfg, params=params, stage_fns=bfns,
+                                time_model=time_model)
+        svc.run(stream())
+        results[f"pipelined-{name}"] = report(f"pipelined-{name}", svc)
+    if args.smoke:
+        assert all(len(r) == 3 for r in results.values())
+        print(f"SMOKE OK: {len(results)} engine configs served "
+              f"{args.requests} requests each")
     return results
 
 

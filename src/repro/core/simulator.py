@@ -12,10 +12,11 @@ completed before its deadline; otherwise the last in-time exit's prediction
 is the result.  Scheduler wall time can optionally be charged to the
 simulated clock (overhead experiments, Fig. 13 analog).
 
-``simulate`` is a compatibility shim over the unified runtime
-(``repro.serving.runtime``): an ``EngineCore`` on a ``VirtualClock`` with
-an ``OracleExecutor`` whose time model has a single batch bucket — every
-dispatch is a singleton batch, i.e. exactly the paper's Fig. 2 loop.
+``simulate`` is a deprecated wrapper over the public serving facade
+(``repro.serving.service``): a ``ServeSpec`` on the oracle executor /
+virtual clock / closed-loop source whose time model has a single batch
+bucket — every dispatch is a singleton batch, i.e. exactly the paper's
+Fig. 2 loop.
 """
 from __future__ import annotations
 
@@ -56,24 +57,37 @@ class SimResult:
                     mean_depth=self.mean_depth, overhead=self.overhead_frac,
                     throughput=self.throughput)
 
+    def to_dict(self, *, per_request: bool = False) -> dict:
+        """All fields as a JSON-able dict (``per_request`` rows are bulky
+        and excluded unless asked for)."""
+        d = dataclasses.asdict(self)
+        if not per_request:
+            d.pop("per_request")
+        return d
+
 
 def simulate(policy, workload: Workload, stage_times, conf_table,
              correct_table, *, charge_overhead: bool = False,
              dispatch_overhead: float = 0.0) -> SimResult:
-    """stage_times: (L,) profiled WCETs; conf_table/correct_table:
+    """Deprecated wrapper over ``repro.serving.Service``: the paper's
+    Fig. 2 loop as an unbatched (singleton-dispatch) discrete-event
+    service.  stage_times: (L,) profiled WCETs; conf_table/correct_table:
     (n_samples, L) oracle outputs per test sample per stage."""
     # imported here: repro.core stays importable without pulling the serving
     # package at module-import time (the runtime imports SimResult from us)
-    from repro.serving.batch.batcher import BatchTimeModel
-    from repro.serving.batch.policy import as_batch_policy
-    from repro.serving.runtime import simulate_runtime
+    from repro.serving.deprecation import deprecate_once
+    from repro.serving.service import ServeSpec, Service
 
-    tm = BatchTimeModel.linear(tuple(float(x) for x in stage_times),
-                               buckets=(1,))
-    # charge_formation=False: the legacy loop never billed next_task time
-    # to policy.sched_time (overhead_frac counts only the policies' own
-    # planning hooks), and neither does this shim
-    pol = as_batch_policy(policy, tm, max_batch=1, charge_formation=False)
-    return simulate_runtime(pol, workload, tm, conf_table, correct_table,
-                            charge_overhead=charge_overhead,
-                            dispatch_overhead=dispatch_overhead, max_batch=1)
+    deprecate_once(
+        "repro.core.simulate",
+        "simulate() is deprecated: build a ServeSpec(batching={'mode': "
+        "'none', ...}) and run it through repro.serving.Service instead")
+    spec = ServeSpec(
+        executor="oracle", clock="virtual", source="closed-loop",
+        batching={"mode": "none",
+                  "stage_times": [float(x) for x in stage_times]},
+        charge_overhead=charge_overhead,
+        dispatch_overhead=dispatch_overhead)
+    return Service.from_spec(spec, policy=policy, workload=workload,
+                             conf_table=conf_table,
+                             correct_table=correct_table).run()

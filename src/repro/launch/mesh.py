@@ -10,17 +10,34 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` where it exists (jax >= 0.6); on older jax
+    the ``Mesh`` object itself is the context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def _mesh(shape, axes):
+    # jax < 0.6 has no jax.sharding.AxisType (Auto is that era's default);
+    # jax < 0.4.35 has no jax.make_mesh at all
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for in-test lowering (8 host devices)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh((n_data, n_model), ("data", "model"))
 
 
 # TPU v5e hardware model (roofline constants, per chip)

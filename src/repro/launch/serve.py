@@ -1,31 +1,214 @@
 """Anytime-decoding serving launcher: imprecise computation per TOKEN.
 
-The paper's stage shedding applied to autoregressive decode: each token runs
-stage 1 (mandatory); deeper stages execute only while the exit confidence is
-below a target — a deadline-free confidence-driven variant of RTDeepIoT's
-depth assignment (with --deadline-ms the FPTAS scheduler governs depth across
-the batch exactly as in serving).
+The paper's stage shedding applied to autoregressive decode: each token
+runs stage 1 (mandatory); deeper stages execute only while the exit
+confidence is below a target — a deadline-free confidence-driven variant
+of RTDeepIoT's depth assignment.
 
-``--pipeline`` applies the serving runtime's async-dispatch idea at token
-granularity: the next-deeper decode step is dispatched (XLA async) *before*
-blocking on the current depth's confidence readback, so the host's
-read-and-decide overlaps device compute; a speculatively dispatched depth
-is simply discarded when the confidence target was already met.
+The decode loop runs through the public serving API: each *token* is one
+imprecise-computation request served by ``repro.serving.Service`` from a
+declarative ``ServeSpec``, with three launch-registered components proving
+the registry's extension points (no core module touched):
+
+* policy ``conf-target`` — assign full depth, stop deepening the moment
+  the measured exit confidence reaches the target;
+* executor ``decode`` — jitted per-depth decode steps; with
+  ``speculate=True`` (``--pipeline``) the next-deeper step is dispatched
+  (XLA async) before the current depth's confidence readback, so the
+  host's read-and-decide overlaps device compute — a speculatively
+  dispatched depth is discarded when the target was already met;
+* source ``token-loop`` — a closed loop of one token at a time: retiring
+  token *t* commits the chosen depth's cache, samples token *t+1* and
+  issues it as the next request.
+
+``--dry-run`` validates the spec against the registry and prints it as
+JSON without touching the model (the CI examples-smoke job).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 24
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serving.registry import (register_executor, register_policy,
+                                    register_source)
+from repro.serving.service import ServeSpec, Service
 
-from repro.configs import get_config
-from repro.models import decode_step, init_decode_cache, init_params
-from repro.training import checkpoint
+
+# ---------------------------------------------------------------------------
+# launch-registered serving components (registry extension points in action)
+# ---------------------------------------------------------------------------
+
+@register_policy("conf-target")
+def _make_conf_target(args, ctx):
+    """Deadline-free depth governor: run deeper only while the measured
+    exit confidence is below ``target`` (BatchPolicy imported lazily so
+    the registration itself stays import-light)."""
+    from repro.serving.batch.policy import BatchPolicy
+
+    class _ConfTarget(BatchPolicy):
+        name = "conf-target"
+
+        def __init__(self, target):
+            super().__init__()
+            self.target = target
+
+        def on_arrival(self, active, task, now):
+            task.assigned_depth = task.clamp_depth(task.num_stages)
+
+        def on_stage_done(self, active, task, now):
+            c = task.last_confidence
+            if c is not None and c >= self.target:
+                task.assigned_depth = task.executed      # stop deepening
+
+        def next_batch(self, active, now):
+            r = self._runnable(active, now)
+            if not r:
+                return None
+            t = min(r, key=lambda x: x.tid)
+            return t.executed, [t]
+
+    return _ConfTarget(float(args.get("target", 0.7)))
+
+
+class DecodeExecutor:
+    """Jitted per-depth decode steps behind the runtime Executor contract.
+
+    Depth *d*'s "stage" recomputes the token at depth d+1 from the current
+    cache (exactly the bespoke loop this launcher used to hand-roll).
+    With ``speculate`` the next-deeper step is dispatched asynchronously
+    before the current depth's confidence readback blocks.
+    """
+
+    def __init__(self, steps, params, cache, tok, *, speculate=False):
+        # jax only enters the process on the non-dry-run path, which has
+        # already imported it to jit `steps` — bind it once here instead of
+        # re-importing in the per-token hot methods
+        import jax
+        import jax.numpy as jnp
+        self._jax, self._jnp = jax, jnp
+        self.steps = steps
+        self.params = params
+        self.cache = cache
+        self.tok = tok
+        self.speculate = speculate
+        self.total_busy = 0.0
+        self.speculated = 0          # deeper steps dispatched speculatively
+        self.spec_hits = 0           # ... that the schedule then consumed
+        self._running = None
+        self._spec = None            # (token, stage, out, new_cache)
+        self._done = None
+        self.chosen = None           # (out, new_cache) of the last commit
+
+    # -- Executor contract ---------------------------------------------
+    @property
+    def busy(self):
+        return self._running is not None
+
+    def wcet(self, stage, n):
+        return 0.0
+
+    def submit(self, stage, tasks, now):
+        jnp = self._jnp
+        task = tasks[0]
+        pos = jnp.full((self.tok.shape[0],), task.sample, jnp.int32)
+        if self._spec is not None and self._spec[:2] == (task.sample, stage):
+            out, new_cache = self._spec[2:]
+            self.spec_hits += 1
+        else:
+            out, new_cache = self.steps[stage](self.params, self.cache,
+                                               self.tok, pos)
+        self._spec = None
+        if self.speculate and stage + 1 < len(self.steps):
+            o2, c2 = self.steps[stage + 1](self.params, self.cache, self.tok,
+                                           pos)
+            self._spec = (task.sample, stage + 1, o2, c2)
+            self.speculated += 1
+        self._running = (stage, tasks, out, new_cache, now)
+
+    def finish_time(self):
+        return None if self.busy else math.inf
+
+    def complete(self, clock):
+        stage, tasks, out, new_cache, t0 = self._running
+        self._running = None
+        self._jax.block_until_ready(out.logits[-1])
+        self.total_busy += clock.now() - t0
+        self._done = (out, new_cache)
+        return stage, tasks
+
+    def commit(self, task, k):
+        self.chosen = self._done
+        return float(self._jnp.mean(self._done[0].confidences[-1]))
+
+    def running_tasks(self):
+        return list(self._running[1]) if self._running is not None else []
+
+
+@register_executor("decode")
+def _make_decode(args, ctx):
+    r = ctx.resources
+    return DecodeExecutor(r["steps"], r["params"], r["cache"], r["tok"],
+                          speculate=bool(args.get("speculate", False)))
+
+
+class TokenLoopSource:
+    """Closed loop of one token request at a time: retiring token *t*
+    commits the chosen depth's cache, lets the ``advance`` callback sample
+    token *t+1*, and issues it as the next request."""
+
+    def __init__(self, n_tokens, n_stages, executor, advance):
+        self.n_tokens = n_tokens
+        self.n_stages = n_stages
+        self.executor = executor
+        self.advance = advance
+        self._next = 0
+        self._ready = n_tokens > 0
+        self._issue_time = 0.0
+
+    def has_pending(self):
+        return self._ready
+
+    def next_time(self):
+        return self._issue_time if self._ready else math.inf
+
+    def pop(self, now):
+        from repro.core.task import Task
+        self._ready = False
+        return Task(arrival=now, deadline=math.inf,
+                    stage_times=(0.0,) * self.n_stages, mandatory=1,
+                    sample=self._next)
+
+    def on_retire(self, task, now):
+        out, new_cache = self.executor.chosen
+        self.executor.cache = new_cache
+        self.executor.tok = self.advance(task, out)
+        self._next += 1
+        if self._next < self.n_tokens:
+            self._ready = True
+            self._issue_time = now
+
+
+@register_source("token-loop")
+def _make_token_loop(args, ctx):
+    return TokenLoopSource(int(args["n_tokens"]), int(args["n_stages"]),
+                           ctx.executor, ctx.resources["advance"])
+
+
+# ---------------------------------------------------------------------------
+# launcher
+# ---------------------------------------------------------------------------
+
+def build_spec(args, n_stages: int) -> ServeSpec:
+    """The launcher's serving configuration, declared once."""
+    return ServeSpec(
+        policy="conf-target", policy_args={"target": args.conf_target},
+        executor="decode", executor_args={"speculate": bool(args.pipeline)},
+        clock="wall", source="token-loop",
+        source_args={"n_tokens": args.tokens, "n_stages": n_stages},
+        batching={"mode": "none", "stage_times": [0.0] * n_stages})
 
 
 def main(argv=None):
@@ -39,16 +222,35 @@ def main(argv=None):
                     help="speculatively dispatch the next-deeper step "
                          "before reading the current confidence (async "
                          "host/device overlap)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate + print the ServeSpec (registry check) "
+                         "without touching the model")
     args = ap.parse_args(argv)
 
+    from repro.configs import get_config
     cfg = get_config(args.arch).reduced()
     if cfg.modality == "features":
         raise SystemExit("classifier serving lives in examples/serve_anytime.py")
+    n_stages = len(cfg.stage_boundaries())
+    spec = build_spec(args, n_stages)
+    if args.dry_run:
+        spec.validate()
+        print(spec.to_json(indent=1))
+        print(f"DRY RUN OK: {args.arch} ({n_stages} stages, "
+              f"{args.tokens} tokens) resolves through the registry")
+        return spec
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import decode_step, init_decode_cache, init_params
+    from repro.training import checkpoint
+
     params = init_params(cfg, jax.random.PRNGKey(0))
     if args.ckpt:
         params, _ = checkpoint.load(args.ckpt, params)
     B = args.batch
-    n_stages = len(cfg.stage_boundaries())
     cache = init_decode_cache(cfg, B, slots=args.tokens + 1)
 
     # jit one step per depth (the per-stage dispatch units of the engine)
@@ -58,46 +260,35 @@ def main(argv=None):
     tok = (jnp.zeros((B, cfg.num_codebooks), jnp.int32)
            if cfg.modality == "audio_stub" else jnp.zeros((B,), jnp.int32))
     depth_hist = np.zeros(n_stages, np.int64)
-    speculated = 0
-    t0 = time.time()
-    for t in range(args.tokens):
-        pos = jnp.full((B,), t, jnp.int32)
-        if args.pipeline:
-            # async deepening: dispatch depth d+1 (XLA returns immediately)
-            # BEFORE blocking on depth d's confidence readback, so the
-            # host's read-and-decide hides behind device compute; the
-            # speculative step is discarded when the target was already met
-            outs = [steps[0](params, cache, tok, pos)]
-            for d in range(1, n_stages + 1):
-                if d < n_stages:
-                    outs.append(steps[d](params, cache, tok, pos))
-                conf = float(jnp.mean(outs[d - 1][0].confidences[-1]))
-                if conf >= args.conf_target or d == n_stages:
-                    out, new_cache = outs[d - 1]
-                    speculated += int(d < n_stages)
-                    break
-        else:
-            # anytime decode: run deeper only while mean confidence < target
-            for d in range(1, n_stages + 1):
-                out, new_cache = steps[d - 1](params, cache, tok, pos)
-                conf = float(jnp.mean(out.confidences[-1]))
-                if conf >= args.conf_target or d == n_stages:
-                    break
+
+    def advance(task, out):
+        """Token transition: record depth, print, sample the next token."""
+        d = task.executed
         depth_hist[d - 1] += 1
-        cache = new_cache
+        print(f"token {task.sample:3d}: depth={d} "
+              f"conf={task.last_confidence:.3f}")
         nxt = jnp.argmax(out.logits[-1], -1).astype(jnp.int32)
-        tok = nxt if cfg.modality != "audio_stub" else \
-            jnp.broadcast_to(nxt[..., :1] if nxt.ndim > 1 else nxt[:, None],
-                             (B, cfg.num_codebooks))
-        print(f"token {t:3d}: depth={d} conf={conf:.3f}")
+        if cfg.modality != "audio_stub":
+            return nxt
+        return jnp.broadcast_to(nxt[..., :1] if nxt.ndim > 1 else nxt[:, None],
+                                (B, cfg.num_codebooks))
+
+    svc = Service.from_spec(spec, steps=steps, params=params, cache=cache,
+                            tok=tok, advance=advance)
+    t0 = time.time()
+    met = svc.run()
     dt = time.time() - t0
+    svc.close()
+    ex = svc.executor
     if args.pipeline:
-        print(f"pipelined decode: {speculated} speculative deeper steps "
-              f"dispatched and discarded")
+        print(f"pipelined decode: {ex.speculated - ex.spec_hits} speculative "
+              f"deeper steps dispatched and discarded "
+              f"({ex.spec_hits} consumed)")
     print(f"\n{args.tokens} tokens in {dt:.1f}s; depth histogram "
-          f"{depth_hist.tolist()} (mean {np.average(np.arange(1, n_stages+1), weights=depth_hist):.2f} "
+          f"{depth_hist.tolist()} (mean {met.mean_depth:.2f} "
           f"of {n_stages}) — stages shed: "
           f"{1 - depth_hist @ np.arange(1, n_stages+1) / (args.tokens * n_stages):.0%} compute saved")
+    return met
 
 
 if __name__ == "__main__":

@@ -8,6 +8,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax < 0.6 compat: shard_map graduated from jax.experimental
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:                                              # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:

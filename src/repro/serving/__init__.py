@@ -1,3 +1,11 @@
+"""Serving package — one public front door, one runtime core.
+
+New code talks to :class:`~repro.serving.service.Service` built from a
+declarative :class:`~repro.serving.service.ServeSpec` (components named by
+registry key — see :mod:`repro.serving.registry`); the four legacy faces
+(``simulate``, ``simulate_batched``, ``ServingEngine``,
+``BatchedServingEngine``) are deprecated thin wrappers over it.
+"""
 from repro.serving.engine import (Request, Response, ServingEngine,
                                   closed_loop_stream, make_stage_fns,
                                   profile_host_overhead, profile_stages)
@@ -6,9 +14,15 @@ from repro.serving.batch import (AdmissionController, BatchedPolicy,
                                  BatchPolicy, BatchTimeModel, StageBatcher,
                                  as_batch_policy, pad_batch,
                                  profile_batched_stages, simulate_batched)
+from repro.serving.registry import (available, register_clock,
+                                    register_executor, register_policy,
+                                    register_source)
 from repro.serving.runtime import (ClosedLoopSource, EngineCore,
                                    OracleExecutor, StreamSource, TableRecorder,
                                    VirtualClock, WallClock, simulate_runtime)
+from repro.serving.service import (ResponseHandle, ServeSpec, Service,
+                                   ServiceMetrics, ServiceResponse, SLOClass,
+                                   StageExit)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
@@ -17,4 +31,8 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "StageBatcher", "as_batch_policy", "pad_batch",
            "profile_batched_stages", "simulate_batched",
            "ClosedLoopSource", "EngineCore", "OracleExecutor", "StreamSource",
-           "TableRecorder", "VirtualClock", "WallClock", "simulate_runtime"]
+           "TableRecorder", "VirtualClock", "WallClock", "simulate_runtime",
+           "ResponseHandle", "ServeSpec", "Service", "ServiceMetrics",
+           "ServiceResponse", "SLOClass", "StageExit",
+           "available", "register_clock", "register_executor",
+           "register_policy", "register_source"]

@@ -18,26 +18,21 @@ unit is a *padded, shape-bucketed batch* of same-stage tasks:
 Every bucketed shape is compiled in warm-up, so steady state never
 recompiles.
 
-``run`` is a compatibility shim over the unified runtime
-(``repro.serving.runtime``): an ``EngineCore`` on a ``WallClock`` with a
-``DeviceExecutor`` over the bucketed batched stage functions.  Because the
-device executor dispatches asynchronously, ``pipelined()`` returns an
-engine whose core pre-selects the next batch while the current one runs
-(``pipeline_depth=2``) — the host/device overlap the ROADMAP's async item
-asks for — without changing this class's legacy constructor or ``run``
-signature.
+``run`` is a deprecated wrapper over the public serving facade
+(``repro.serving.service``): a ``ServeSpec`` on the ``device-batched``
+executor / wall clock / stream source.  Because the device executor
+dispatches asynchronously, ``pipelined()`` returns an engine whose core
+pre-selects the next batch while the current one runs
+(``ServeSpec(pipeline_depth=2)``) — the host/device overlap the ROADMAP's
+async item asks for — without changing this class's legacy constructor or
+``run`` signature.
 """
 from __future__ import annotations
 
-from repro.core.task import Task
 from repro.serving.batch.admission import AdmissionController
 from repro.serving.batch.batcher import BatchTimeModel
 from repro.serving.batch.policy import BatchPolicy, as_batch_policy
 from repro.serving.batch.stage_fns import BatchedStageFns
-from repro.serving.engine import Request
-from repro.serving.runtime import (EngineCore, ResponseRecorder, StreamSource,
-                                   WallClock)
-from repro.serving.runtime.device import DeviceExecutor
 
 
 class BatchedServingEngine:
@@ -68,37 +63,26 @@ class BatchedServingEngine:
         return self
 
     # ------------------------------------------------------------------
-    def _make_task(self, req: Request, now: float) -> Task:
-        # §II-B with batching: the non-preemptible region is one *batched*
-        # stage, priced at the largest batch this engine will dispatch
-        worst = max(self.time_model.wcet(s, self._effective_max_batch)
-                    for s in range(self.cfg.num_stages))
-        adj = self.host_overhead + worst
-        return Task(arrival=now, deadline=req.arrival + req.rel_deadline - adj,
-                    stage_times=self.time_model.single_times(),
-                    mandatory=self.cfg.mandatory_stages, sample=req.sample,
-                    client=req.client)
-
-    # ------------------------------------------------------------------
     def run(self, request_stream):
         """request_stream: iterable of (offset_seconds, Request), offsets
         non-decreasing relative to engine start."""
-        pending = list(request_stream)
-        pending.sort(key=lambda p: p[0])
-        if pending:   # compile every (stage, bucket) before the clock starts
-            self.stage_fns.warmup(self.params, pending[0][1].inputs)
-        executor = DeviceExecutor(self.stage_fns, self.params, self.time_model)
+        from repro.serving.deprecation import deprecate_once
+        from repro.serving.service import ServeSpec, Service
 
-        def admit(req, now):
-            t = self._make_task(req, now)
-            executor.register(t, req)
-            return t
-
-        core = EngineCore(self.policy, WallClock(), executor,
-                          StreamSource(pending, admit),
-                          ResponseRecorder(executor, self.responses),
-                          admission=self.admission,
-                          pipeline_depth=self._pipeline_depth,
-                          max_batch=self._effective_max_batch)
-        core.run()
+        deprecate_once(
+            "repro.serving.batch.BatchedServingEngine.run",
+            "BatchedServingEngine is deprecated: build a ServeSpec("
+            "executor='device-batched', clock='wall', source='stream') "
+            "and run it through repro.serving.Service instead")
+        spec = ServeSpec(
+            executor="device-batched", clock="wall", source="stream",
+            batching={"max_batch": self._effective_max_batch},
+            host_overhead=self.host_overhead,
+            pipeline_depth=self._pipeline_depth)
+        svc = Service.from_spec(spec, policy=self.policy, cfg=self.cfg,
+                                params=self.params, stage_fns=self.stage_fns,
+                                time_model=self.time_model,
+                                admission=self.admission)
+        svc.run(request_stream)
+        self.responses.extend(svc.responses)
         return self.responses

@@ -11,16 +11,15 @@ An optional ``AdmissionController`` runs at issue time; a rejected request
 counts as a miss (depth 0) and frees its client immediately — rejecting is
 a scheduling decision, not an accounting trick.
 
-``simulate_batched`` is a compatibility shim over the unified runtime
-(``repro.serving.runtime``) — the same ``EngineCore`` as ``simulate``,
-configured with the caller's batch time model; pipelined async dispatch
-is available through ``simulate_runtime(pipeline_depth=2)``.
+``simulate_batched`` is a deprecated wrapper over the public serving
+facade (``repro.serving.service``): a ``ServeSpec`` on the oracle
+executor / virtual clock / closed-loop source with the caller's batch
+time model; pipelined async dispatch is ``ServeSpec(pipeline_depth=2)``.
 """
 from __future__ import annotations
 
 from repro.core.simulator import SimResult, Workload
 from repro.serving.batch.batcher import BatchTimeModel
-from repro.serving.runtime.core import simulate_runtime
 
 
 def simulate_batched(policy, workload: Workload, time_model: BatchTimeModel,
@@ -32,11 +31,24 @@ def simulate_batched(policy, workload: Workload, time_model: BatchTimeModel,
 
     `policy` may be any single-task Policy (wrapped via ``as_batch_policy``)
     or a ready-made BatchPolicy."""
+    from repro.serving.deprecation import deprecate_once
+    from repro.serving.service import ServeSpec, Service
+
+    deprecate_once(
+        "repro.serving.batch.simulate_batched",
+        "simulate_batched() is deprecated: build a ServeSpec(batching="
+        "{'buckets': ..., ...}) and run it through repro.serving.Service "
+        "instead")
     L = conf_table.shape[1]
     if time_model.num_stages != L:
         raise ValueError(f"time model has {time_model.num_stages} stages, "
                          f"oracle tables have {L}")
-    return simulate_runtime(policy, workload, time_model, conf_table,
-                            correct_table, charge_overhead=charge_overhead,
-                            dispatch_overhead=dispatch_overhead,
-                            admission=admission, max_batch=max_batch)
+    spec = ServeSpec(
+        executor="oracle", clock="virtual", source="closed-loop",
+        batching={"max_batch": max_batch},
+        charge_overhead=charge_overhead,
+        dispatch_overhead=dispatch_overhead)
+    return Service.from_spec(spec, policy=policy, workload=workload,
+                             time_model=time_model, admission=admission,
+                             conf_table=conf_table,
+                             correct_table=correct_table).run()

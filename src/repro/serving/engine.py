@@ -16,10 +16,10 @@ Deadline adjustment (§II-B): the caller-visible deadline is reduced by the
 profiled host/dispatch overhead and one worst-case stage time (the
 non-preemptible region) before it reaches the scheduler.
 
-``run`` is a compatibility shim over the unified runtime
-(``repro.serving.runtime``): an ``EngineCore`` on a ``WallClock`` with a
-``DeviceExecutor`` over the per-stage jitted functions, dispatching
-singleton batches (``max_batch=1``).
+``run`` is a deprecated wrapper over the public serving facade
+(``repro.serving.service``): a ``ServeSpec`` on the ``device-single``
+executor / wall clock / stream source, dispatching singleton batches
+(``batching={"mode": "none"}``).
 """
 from __future__ import annotations
 
@@ -30,17 +30,17 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.task import Task
 from repro.models import stage_forward
 
 
 @dataclasses.dataclass
 class Request:
     inputs: Any                    # single-sample input pytree (no batch dim)
-    rel_deadline: float
+    rel_deadline: Optional[float] = None   # None: the SLO class supplies it
     sample: int = 0
     client: int = 0
     arrival: float = 0.0           # wall time, filled by the engine
+    slo: Optional[str] = None      # SLO class name (repro.serving.service)
 
 
 @dataclasses.dataclass
@@ -122,51 +122,27 @@ class ServingEngine:
         self.responses: list = []
 
     # ------------------------------------------------------------------
-    def _make_task(self, req: Request, now: float) -> Task:
-        # §II-B deadline adjustment: CPU overhead + one non-preemptive stage
-        adj = self.host_overhead + max(self.stage_wcet)
-        return Task(arrival=now, deadline=req.arrival + req.rel_deadline - adj,
-                    stage_times=self.stage_wcet,
-                    mandatory=self.cfg.mandatory_stages, sample=req.sample,
-                    client=req.client)
-
-    # ------------------------------------------------------------------
     def run(self, request_stream):
         """request_stream: iterable of (offset_seconds, Request), offsets
         non-decreasing relative to engine start."""
-        from repro.serving.batch.batcher import BatchTimeModel
-        from repro.serving.batch.policy import as_batch_policy
-        from repro.serving.runtime import (EngineCore, ResponseRecorder,
-                                           StreamSource, WallClock)
-        from repro.serving.runtime.device import (DeviceExecutor,
-                                                  SingleStageFns)
+        from repro.serving.deprecation import deprecate_once
+        from repro.serving.service import ServeSpec, Service
 
-        pending = list(request_stream)
-        pending.sort(key=lambda p: p[0])
-        # warm-up: compile every stage before the clock starts (deadlines are
-        # milliseconds; a first-call compile would miss everything)
-        if pending:
-            h = pending[0][1].inputs
-            for fn in self.stage_fns:
-                out = fn(self.params, h)
-                jax.block_until_ready(out[0])
-                h = out[0]
-        tm = BatchTimeModel.linear(self.stage_wcet, buckets=(1,))
-        executor = DeviceExecutor(SingleStageFns(self.stage_fns), self.params,
-                                  tm)
-
-        def admit(req, now):
-            t = self._make_task(req, now)
-            executor.register(t, req)
-            return t
-
-        # charge_formation=False: the legacy engine never billed next_task
-        # time to policy.sched_time (it holds only the policies' own hooks)
-        core = EngineCore(as_batch_policy(self.policy, tm, max_batch=1,
-                                          charge_formation=False),
-                          WallClock(), executor, StreamSource(pending, admit),
-                          ResponseRecorder(executor, self.responses))
-        core.run()
+        deprecate_once(
+            "repro.serving.ServingEngine.run",
+            "ServingEngine is deprecated: build a ServeSpec(executor="
+            "'device-single', clock='wall', source='stream') and run it "
+            "through repro.serving.Service instead")
+        spec = ServeSpec(
+            executor="device-single", clock="wall", source="stream",
+            batching={"mode": "none",
+                      "stage_times": [float(x) for x in self.stage_wcet]},
+            host_overhead=self.host_overhead)
+        svc = Service.from_spec(spec, policy=self.policy, cfg=self.cfg,
+                                params=self.params,
+                                stage_fns=self.stage_fns)
+        svc.run(request_stream)
+        self.responses.extend(svc.responses)
         return self.responses
 
 

@@ -16,18 +16,20 @@ RequestSource          ``ClosedLoopSource``      ``StreamSource``
                        (K clients, §IV)          ((offset, Request) list)
 =====================  ========================  =========================
 
-Legacy entry points are thin configurations of the core (all public
-signatures unchanged):
+New callers do not wire these axes by hand: the public front door is
+``repro.serving.service`` — a declarative ``ServeSpec`` resolved through
+``repro.serving.registry`` builds the ``EngineCore``.  The legacy entry
+points are deprecated wrappers over that facade (all public signatures
+unchanged, one-shot ``DeprecationWarning`` each):
 
-* ``repro.core.simulate``            → ``simulate_runtime`` with a
-  single-bucket ``BatchTimeModel.linear(stage_times, (1,))`` and
-  ``max_batch=1`` (every dispatch is a singleton batch).
-* ``repro.serving.batch.simulate_batched`` → ``simulate_runtime`` with the
+* ``repro.core.simulate``            → ``ServeSpec(batching={"mode":
+  "none", ...})`` — single-bucket pricing, every dispatch a singleton.
+* ``repro.serving.batch.simulate_batched`` → ``ServeSpec`` with the
   caller's time model / admission controller / ``max_batch``.
-* ``repro.serving.ServingEngine.run``      → ``EngineCore(WallClock,
-  DeviceExecutor(SingleStageFns), StreamSource, max_batch=1)``.
-* ``repro.serving.batch.BatchedServingEngine.run`` → ``EngineCore(
-  WallClock, DeviceExecutor(BatchedStageFns), StreamSource)``.
+* ``repro.serving.ServingEngine.run``      → ``ServeSpec(executor=
+  "device-single", clock="wall", source="stream")``.
+* ``repro.serving.batch.BatchedServingEngine.run`` → ``ServeSpec(
+  executor="device-batched", clock="wall", source="stream")``.
 
 Runtime-only capabilities on top of the unified core:
 

@@ -76,7 +76,8 @@ class WallClock(Clock):
         self._t0 = None
 
     def start(self) -> None:
-        self._t0 = time.perf_counter()
+        if self._t0 is None:        # idempotent: a live Service starts the
+            self._t0 = time.perf_counter()   # clock before the engine does
 
     def now(self) -> float:
         if self._t0 is None:

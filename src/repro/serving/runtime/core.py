@@ -69,18 +69,19 @@ class TableRecorder:
         conf = float(self.conf_table[task.sample, depth - 1]) if depth else 0.0
         self.finished.append(dict(tid=task.tid, missed=missed, correct=correct,
                                   depth=depth, conf=conf, client=task.client,
-                                  deadline=task.deadline, arrival=task.arrival,
-                                  rejected=rejected))
+                                  sample=task.sample, deadline=task.deadline,
+                                  arrival=task.arrival, rejected=rejected))
 
     def result(self, core) -> SimResult:
         finished = self.finished
         n = len(finished)
+        ok = [f for f in finished if not f["missed"]]
         acc = float(np.mean([f["correct"] for f in finished])) if n else 0.0
         miss = float(np.mean([f["missed"] for f in finished])) if n else 0.0
-        depth = float(np.mean([f["depth"] for f in finished
-                               if not f["missed"]])) if n else 0.0
-        conf = float(np.mean([f["conf"] for f in finished
-                              if not f["missed"]])) if n else 0.0
+        # guard on the non-missed subset, not n: an all-miss run must
+        # report 0.0, not NaN (which would poison the JSON exports)
+        depth = float(np.mean([f["depth"] for f in ok])) if ok else 0.0
+        conf = float(np.mean([f["conf"] for f in ok])) if ok else 0.0
         busy = core.executor.total_busy
         sched = core.policy.sched_time
         denom = busy + sched
@@ -130,6 +131,9 @@ class EngineCore:
         self.executor = executor
         self.source = source
         self.recorder = recorder
+        # optional per-stage observation hook (Service streams anytime
+        # exits through it); legacy recorders don't define it
+        self._on_stage = getattr(recorder, "on_stage", None)
         self.admission = admission
         self.pipeline_depth = pipeline_depth
         self.dispatch_overhead = dispatch_overhead
@@ -255,6 +259,8 @@ class EngineCore:
             if t.deadline >= now - _EPS:          # stage finished in time
                 t.executed += 1
                 t.confidences.append(self.executor.commit(t, k))
+                if self._on_stage is not None:
+                    self._on_stage(t, now)
                 w0 = time.perf_counter()
                 self.policy.on_stage_done(self._active, t, now)
                 self._account(self._cost(time.perf_counter() - w0))

@@ -5,6 +5,11 @@ import pytest
 # per the assignment: XLA_FLAGS must NOT be set globally here).
 jax.config.update("jax_enable_x64", False)
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running subprocess tests")
+
 # hypothesis is an optional dependency: when absent, install a stub so the
 # property-test modules still *collect* — @given tests turn into skips and
 # every plain test in those modules keeps running.

@@ -18,11 +18,9 @@ import pytest
 
 from repro.core import (EDF, LCF, RR, RTDeepIoT, Task, Workload,
                         make_predictor, simulate)
+from repro.serving import ServeSpec, Service
 from repro.serving.batch import BatchTimeModel, simulate_batched
-from repro.serving.runtime import (ClosedLoopSource, EngineCore,
-                                   OracleExecutor, TableRecorder,
-                                   VirtualClock, simulate_runtime)
-from repro.serving.batch.policy import as_batch_policy
+from repro.serving.runtime import OracleExecutor, simulate_runtime
 
 STAGE_TIMES = (0.004, 0.007, 0.010)
 
@@ -88,6 +86,35 @@ def test_golden_parity(policy_name, kind):
     else:
         res = simulate_batched(pol, golden_workload(), time_model(), conf,
                                correct)
+    acc, miss, depth, mconf, makespan, thr = GOLDEN[(policy_name, kind)]
+    assert res.accuracy == pytest.approx(acc, rel=1e-12)
+    assert res.miss_rate == pytest.approx(miss, rel=1e-12)
+    assert res.mean_depth == pytest.approx(depth, rel=1e-12)
+    assert res.mean_conf == pytest.approx(mconf, rel=1e-12)
+    assert res.makespan == pytest.approx(makespan, rel=1e-12)
+    assert res.throughput == pytest.approx(thr, rel=1e-12)
+    assert res.n_requests == 300
+
+
+@pytest.mark.parametrize("policy_name,kind", sorted(GOLDEN))
+def test_golden_parity_via_servespec(policy_name, kind):
+    """The same pre-refactor constants, bit for bit, when the engine is
+    declared as a ServeSpec (registry-built policy included) and run
+    through the Service facade — for all four policies on both
+    discrete-event paths.  The spec round-trips through JSON en route."""
+    conf, correct = oracle_tables()
+    pargs = {"predictor": "exp"} if policy_name == "rtdeepiot" else {}
+    if kind == "sim":
+        batching = {"mode": "none", "stage_times": list(STAGE_TIMES)}
+    else:
+        batching = {"buckets": [1, 2, 4, 8, 16], "marginal": 0.15,
+                    "stage_times": list(STAGE_TIMES)}
+    spec = ServeSpec(policy=policy_name, policy_args=pargs,
+                     executor="oracle", clock="virtual",
+                     source="closed-loop", batching=batching)
+    spec = ServeSpec.from_json(spec.to_json())
+    res = Service.from_spec(spec, workload=golden_workload(),
+                            conf_table=conf, correct_table=correct).run()
     acc, miss, depth, mconf, makespan, thr = GOLDEN[(policy_name, kind)]
     assert res.accuracy == pytest.approx(acc, rel=1e-12)
     assert res.miss_rate == pytest.approx(miss, rel=1e-12)
@@ -187,21 +214,20 @@ def test_pipelined_dispatch_keeps_deadline_invariant():
     """Overloaded closed loop, pipeline_depth=2: every dispatched batch —
     pre-selected, re-validated, topped off — satisfies the batching
     deadline invariant at TRUE dispatch time, and pre-selection actually
-    gets used."""
+    gets used.  The checking executor rides into the Service as a
+    component-instance resource."""
     conf, correct = oracle_tables()
     tm = time_model()
     wl = Workload(n_clients=48, d_lo=0.01, d_hi=0.25, n_requests=400, seed=2)
-    pol = as_batch_policy(mk_policy("rtdeepiot", conf), tm)
     ex = InvariantCheckingExecutor(tm, conf)
-    core = EngineCore(pol, VirtualClock(charge_overhead=True), ex,
-                      ClosedLoopSource(wl, conf.shape[0], tm.single_times()),
-                      TableRecorder(conf, correct),
-                      pipeline_depth=2, dispatch_overhead=1e-4,
-                      policy_cost=5e-4, max_batch=tm.max_batch)
-    recorder = core.run()
-    res = recorder.result(core)
-    assert ex.checked == core.n_dispatches > 0
-    assert core.presel_hits > 0
+    spec = ServeSpec(policy="rtdeepiot", policy_args={"predictor": "exp"},
+                     executor="oracle", clock="virtual", source="closed-loop",
+                     pipeline_depth=2, dispatch_overhead=1e-4,
+                     policy_cost=5e-4, charge_overhead=True)
+    res = Service.from_spec(spec, executor=ex, time_model=tm, workload=wl,
+                            conf_table=conf, correct_table=correct).run()
+    assert ex.checked == res.n_dispatches > 0
+    assert res.presel_hits > 0
     assert res.n_requests == 400
     assert res.host_serial < res.sched_charged   # some host work was hidden
 
@@ -254,7 +280,7 @@ def test_wall_clock_batched_engine_serves_all(pipelined):
     import jax
     from repro.configs import get_config
     from repro.models import init_params
-    from repro.serving import BatchedServingEngine, closed_loop_stream
+    from repro.serving import closed_loop_stream
     from repro.training import DifficultyDataset
 
     cfg = get_config("anytime-classifier")
@@ -264,13 +290,16 @@ def test_wall_clock_batched_engine_serves_all(pipelined):
     # analytic time model: scheduling decisions only need plausible prices
     tm = BatchTimeModel.linear((0.002, 0.003, 0.004), (1, 2, 4),
                                marginal=0.25)
-    pol = RTDeepIoT(make_predictor("exp", prior_curve=[.5, .7, .85]))
-    eng = BatchedServingEngine(cfg, params, pol, time_model=tm)
-    if pipelined:
-        eng = eng.pipelined()
+    spec = ServeSpec(policy="rtdeepiot",
+                     policy_args={"predictor": "exp",
+                                  "prior_curve": [.5, .7, .85]},
+                     executor="device-batched", clock="wall", source="stream",
+                     pipeline_depth=2 if pipelined else 1)
+    svc = Service.from_spec(spec, cfg=cfg, params=params, time_model=tm)
     stream = closed_loop_stream(test["inputs"], test["labels"], n_clients=4,
                                 d_lo=0.2, d_hi=0.5, n_requests=10, seed=1)
-    responses = eng.run(stream)
+    svc.run(stream)
+    responses = svc.responses
     assert len(responses) == 10
     done = [r for r in responses if not r.missed]
     assert len(done) >= 7            # generous deadlines: most complete
@@ -280,7 +309,7 @@ def test_wall_clock_batched_engine_serves_all(pipelined):
 
 
 # ---------------------------------------------------------------------------
-# EngineCore direct API: custom single-shot source/recorder wiring
+# custom single-shot source injected into the Service as a resource
 # ---------------------------------------------------------------------------
 
 def test_engine_core_drains_unfinished_tasks_at_deadline():
@@ -307,12 +336,13 @@ def test_engine_core_drains_unfinished_tasks_at_deadline():
         def on_retire(self, task, now):
             pass
 
-    pol = as_batch_policy(RTDeepIoT(make_predictor(
-        "exp", prior_curve=[0.5, 0.7, 0.9])), tm)
-    core = EngineCore(pol, VirtualClock(), OracleExecutor(tm, conf),
-                      OneShotSource(), TableRecorder(conf, correct),
-                      max_batch=1)
-    recorder = core.run()
-    assert len(recorder.finished) == 1
-    assert recorder.finished[0]["missed"]
-    assert core.makespan == pytest.approx(0.1)
+    spec = ServeSpec(policy="rtdeepiot",
+                     policy_args={"predictor": "exp",
+                                  "prior_curve": [0.5, 0.7, 0.9]},
+                     executor="oracle", clock="virtual", source="stream",
+                     batching={"max_batch": 1})
+    res = Service.from_spec(spec, source=OneShotSource(), time_model=tm,
+                            conf_table=conf, correct_table=correct).run()
+    assert res.n_requests == 1
+    assert res.per_request[0]["missed"]
+    assert res.makespan == pytest.approx(0.1)

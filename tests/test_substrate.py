@@ -155,8 +155,7 @@ def test_train_decreases_loss(rng):
 # ---------------------------------------------------------------------------
 
 def test_serving_engine_end_to_end(rng):
-    from repro.core import RTDeepIoT, make_predictor
-    from repro.serving import (ServingEngine, closed_loop_stream,
+    from repro.serving import (ServeSpec, Service, closed_loop_stream,
                                make_stage_fns, profile_stages)
 
     cfg = get_config("anytime-classifier")
@@ -166,15 +165,21 @@ def test_serving_engine_end_to_end(rng):
     fns = make_stage_fns(cfg)
     sample = jax.tree.map(lambda x: x[:1], test["inputs"])
     wcet, _, _ = profile_stages(cfg, params, fns, sample, n_runs=5)
-    pol = RTDeepIoT(make_predictor("exp", prior_curve=[.5, .7, .85]))
+    spec = ServeSpec(policy="rtdeepiot",
+                     policy_args={"predictor": "exp",
+                                  "prior_curve": [.5, .7, .85]},
+                     executor="device-single", clock="wall", source="stream",
+                     batching={"mode": "none",
+                               "stage_times": [float(x) for x in wcet]})
+    svc = Service.from_spec(spec, cfg=cfg, params=params, stage_fns=fns)
     # paper-like ratio: relative deadlines are many multiples of one stage
     # (their GPU stages ~10-25ms vs 10-300ms deadlines); our CPU stages are
     # ~1ms so host dispatch is a visible fraction — scale accordingly
     stream = closed_loop_stream(test["inputs"], test["labels"], n_clients=3,
                                 d_lo=float(8 * wcet.max()),
                                 d_hi=float(25 * wcet.max()), n_requests=12)
-    eng = ServingEngine(cfg, params, pol, stage_wcet=wcet)
-    responses = eng.run(stream)
+    svc.run(stream)
+    responses = svc.responses
     assert len(responses) == 12
     done = [r for r in responses if not r.missed]
     assert len(done) >= 7            # generous deadlines: most complete
@@ -184,8 +189,7 @@ def test_serving_engine_end_to_end(rng):
 
 
 def test_serving_engine_tight_deadlines_shed_stages(rng):
-    from repro.core import RTDeepIoT, make_predictor
-    from repro.serving import (ServingEngine, closed_loop_stream,
+    from repro.serving import (ServeSpec, Service, closed_loop_stream,
                                make_stage_fns, profile_stages)
 
     cfg = get_config("anytime-classifier")
@@ -195,11 +199,16 @@ def test_serving_engine_tight_deadlines_shed_stages(rng):
     fns = make_stage_fns(cfg)
     sample = jax.tree.map(lambda x: x[:1], test["inputs"])
     wcet, _, _ = profile_stages(cfg, params, fns, sample, n_runs=5)
-    pol = RTDeepIoT(make_predictor("exp", prior_curve=[.5, .7, .85]))
+    spec = ServeSpec(policy="rtdeepiot",
+                     policy_args={"predictor": "exp",
+                                  "prior_curve": [.5, .7, .85]},
+                     executor="device-single", clock="wall", source="stream",
+                     batching={"mode": "none",
+                               "stage_times": [float(x) for x in wcet]})
+    svc = Service.from_spec(spec, cfg=cfg, params=params, stage_fns=fns)
     stream = closed_loop_stream(test["inputs"], test["labels"], n_clients=6,
                                 d_lo=float(3.5 * wcet.max()),
                                 d_hi=float(7 * wcet.max()), n_requests=18)
-    eng = ServingEngine(cfg, params, pol, stage_wcet=wcet)
-    responses = eng.run(stream)
-    depths = [r.depth for r in responses if not r.missed]
+    svc.run(stream)
+    depths = [r.depth for r in svc.responses if not r.missed]
     assert depths and np.mean(depths) < cfg.num_stages  # shedding happened
