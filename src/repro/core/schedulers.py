@@ -84,13 +84,50 @@ class RTDeepIoT(Policy):
         self.sched_time += time.perf_counter() - t0
         self.invocations += 1
 
+    def _dispatch_key(self, task):
+        """Dispatch preference among feasible runnable tasks (EDF);
+        weight-aware variants override."""
+        return (task.deadline, task.tid)
+
     def next_task(self, active, now):
         r = self._runnable(active, now)
         # EDF among tasks with remaining assigned work, feasibility-checked:
         # the next stage must itself finish before the deadline
         r = [t for t in r
              if now + t.stage_times[t.executed] <= t.deadline + 1e-12]
-        return min(r, key=lambda t: (t.deadline, t.tid)) if r else None
+        return min(r, key=self._dispatch_key) if r else None
+
+
+class WeightedRTDeepIoT(RTDeepIoT):
+    """SLO-weighted RTDeepIoT (``register_policy("rtdeepiot-weighted")``).
+
+    The FPTAS objective and the §II-E greedy swap are already
+    importance-weighted through ``Task.weight`` (paper §II-A: weighted
+    accuracy) — depth *planning* favors heavy classes out of the box.
+    This variant extends that preference to the two remaining
+    weight-blind decisions, which matter exactly under overload when
+    seats are contended:
+
+    * dispatch tie-breaks: among equal deadlines, the heavier task runs
+      first;
+    * batch composition: ``batch_rank`` seats co-runners by descending
+      weight before urgency, so a full bucket sheds light-class work
+      first.
+    """
+
+    def __init__(self, predictor, delta: float = 0.1):
+        super().__init__(predictor, delta=delta)
+        self.name = f"rtdeepiot-weighted-{predictor.name}"
+
+    @staticmethod
+    def _weight(task) -> float:
+        return float(getattr(task, "weight", 1.0))
+
+    def _dispatch_key(self, task):
+        return (task.deadline, -self._weight(task), task.tid)
+
+    def batch_rank(self, task, now):
+        return (-self._weight(task), task.deadline, task.tid)
 
 
 class EDF(Policy):

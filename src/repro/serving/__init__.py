@@ -23,6 +23,13 @@ from repro.serving.runtime import (ClosedLoopSource, EngineCore,
 from repro.serving.service import (ResponseHandle, ServeSpec, Service,
                                    ServiceMetrics, ServiceResponse, SLOClass,
                                    StageExit)
+# importing the traffic subsystem registers its source keys
+# ("traffic", "replay") — see repro.serving.traffic for the full surface
+from repro.serving.traffic import (MetricsStreamer, RequestMix, Scenario,
+                                   ServiceSnapshot, TraceRecorder,
+                                   TrafficSource, load_trace,
+                                   make_arrival_process, record_trace,
+                                   scenario_spec, verify_replay)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
@@ -35,4 +42,8 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "ResponseHandle", "ServeSpec", "Service", "ServiceMetrics",
            "ServiceResponse", "SLOClass", "StageExit",
            "available", "register_clock", "register_executor",
-           "register_policy", "register_source"]
+           "register_policy", "register_source",
+           "MetricsStreamer", "RequestMix", "Scenario", "ServiceSnapshot",
+           "TraceRecorder", "TrafficSource", "load_trace",
+           "make_arrival_process", "record_trace", "scenario_spec",
+           "verify_replay"]

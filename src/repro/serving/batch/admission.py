@@ -80,12 +80,18 @@ class AdmissionController:
         return AdmissionDecision(True, None, "ok")
 
     def apply(self, active, task, now: float) -> AdmissionDecision:
-        """Decide and mutate ``task.depth_cap``; caller drops on reject."""
+        """Decide and mutate ``task.depth_cap``; caller drops on reject.
+
+        A pre-existing cap (SLO class, backpressure shedding) is only
+        ever tightened — admission control must not re-open depth some
+        earlier layer already took away."""
         dec = self.decide(active, task, now)
         if not dec.admitted:
             self.rejected += 1
             task.dropped = True
         elif dec.depth_cap is not None:
             self.capped += 1
-            task.depth_cap = max(task.mandatory, dec.depth_cap)
+            cap = max(task.mandatory, dec.depth_cap)
+            task.depth_cap = cap if task.depth_cap is None \
+                else min(task.depth_cap, cap)
         return dec

@@ -30,7 +30,8 @@ this module stays numpy-only):
 
 ========  =================================================================
 policy    ``rtdeepiot`` (predictor/prior_curve/delta/oracle via args),
-          ``edf``, ``lcf``, ``rr``
+          ``rtdeepiot-weighted`` (same + ``Task.weight``-aware dispatch
+          and batch seating), ``edf``, ``lcf``, ``rr``
 executor  ``oracle`` (conf tables + BatchTimeModel),
           ``device-single`` (per-stage jitted fns, singleton dispatch),
           ``device-batched`` (bucketed BatchedStageFns)
@@ -38,6 +39,11 @@ clock     ``virtual`` (discrete event), ``wall`` (real time)
 source    ``closed-loop`` (§IV K-client workload), ``stream``
           ((offset, Request) list), ``live`` (``Service.submit`` queue)
 ========  =================================================================
+
+``repro.serving.traffic`` registers two more sources from outside this
+module (the extension-point proof at subsystem scale): ``traffic``
+(seeded open-loop arrival generators x per-class request mixes) and
+``replay`` (recorded JSONL traces re-injected bit-for-bit).
 """
 from __future__ import annotations
 
@@ -107,23 +113,36 @@ def available(kind: str) -> list:
 # built-in policies
 # ---------------------------------------------------------------------------
 
+def _predictor_from(args: dict, ctx: BuildContext):
+    from repro.core.utility import make_predictor
+    name = args.get("predictor", "exp")
+    if name == "oracle":
+        return make_predictor("oracle",
+                              oracle_table=ctx.resources["conf_table"])
+    prior = args.get("prior_curve")
+    if prior is None:
+        prior = ctx.resources["conf_table"].mean(0)
+    return make_predictor(name, prior_curve=prior)
+
+
 @register_policy("rtdeepiot")
 def _make_rtdeepiot(args: dict, ctx: BuildContext):
     """The paper's scheduler.  args: ``predictor`` (exp/max/lin/oracle),
     ``prior_curve`` (list; default: conf_table.mean(0)), ``delta``."""
     from repro.core.schedulers import RTDeepIoT
-    from repro.core.utility import make_predictor
-    name = args.get("predictor", "exp")
-    delta = float(args.get("delta", 0.1))
-    if name == "oracle":
-        pred = make_predictor("oracle",
-                              oracle_table=ctx.resources["conf_table"])
-    else:
-        prior = args.get("prior_curve")
-        if prior is None:
-            prior = ctx.resources["conf_table"].mean(0)
-        pred = make_predictor(name, prior_curve=prior)
-    return RTDeepIoT(pred, delta=delta)
+    return RTDeepIoT(_predictor_from(args, ctx),
+                     delta=float(args.get("delta", 0.1)))
+
+
+@register_policy("rtdeepiot-weighted")
+def _make_rtdeepiot_weighted(args: dict, ctx: BuildContext):
+    """SLO-weighted RTDeepIoT: the FPTAS objective weighted by
+    ``Task.weight`` (as the base planner already is) *plus* weight-aware
+    dispatch tie-breaks and batch seating — gold-class requests win
+    contended utility under overload.  Same args as ``rtdeepiot``."""
+    from repro.core.schedulers import WeightedRTDeepIoT
+    return WeightedRTDeepIoT(_predictor_from(args, ctx),
+                             delta=float(args.get("delta", 0.1)))
 
 
 @register_policy("edf")

@@ -159,6 +159,7 @@ class EngineCore:
         self._active: list = []
         self._presel = None                # (stage, batch) pre-selection
         self._overlap_left = 0.0           # hideable host seconds this window
+        self._pullins: list = []           # cancel-after-admission requests
 
     # ------------------------------------------------------------------
     def _cost(self, measured: float) -> float:
@@ -189,6 +190,29 @@ class EngineCore:
     def _expire(self, now: float) -> None:
         for t in list(self._active):
             if t.deadline <= now:
+                self._retire(t, now)
+
+    # -- cancellation after admission ----------------------------------
+    def request_pullin(self, task) -> None:
+        """Thread-safe (GIL append) request to shed ``task``'s remaining
+        *optional* stages: its depth target is pulled in to the mandatory
+        part already owed, and once nothing mandatory remains the task
+        retires immediately with its deepest in-time exit — the paper's
+        imprecise-computation cancel, applied live."""
+        self._pullins.append(task)
+
+    def _apply_pullins(self, now: float) -> None:
+        inflight = {id(t) for t in self.executor.running_tasks()}
+        while self._pullins:
+            t = self._pullins.pop()
+            if t not in self._active:
+                continue                   # already retired — nothing to shed
+            cap = max(t.mandatory, t.executed)
+            t.depth_cap = cap if t.depth_cap is None else min(t.depth_cap, cap)
+            t.assigned_depth = max(t.executed, min(t.assigned_depth, cap))
+            # an in-flight member finishes its committed stage first (§II-B
+            # non-preemption); _complete retires it via the depth check
+            if t.executed >= cap and id(t) not in inflight:
                 self._retire(t, now)
 
     # -- dispatch ------------------------------------------------------
@@ -299,6 +323,8 @@ class EngineCore:
             clock.start()
         while src.has_pending() or ex.busy or self._alive():
             now = clock.now()
+            if self._pullins:
+                self._apply_pullins(now)
             if clock.realtime:
                 # wall clock: drain everything that has arrived before the
                 # dispatch decision (legacy engine order — the policy must

@@ -36,6 +36,10 @@ class RequestSource:
     def on_retire(self, task, now: float) -> None:
         """A task left the system (completed / expired / rejected)."""
 
+    def qsize(self) -> int:
+        """Arrivals still pending (metrics streaming / backpressure)."""
+        return 0
+
 
 class ClosedLoopSource(RequestSource):
     def __init__(self, workload, n_samples: int, stage_times):
@@ -76,11 +80,20 @@ class ClosedLoopSource(RequestSource):
         # retires at its deadline, so `now` is correct in both cases)
         heapq.heappush(self.events, (now, -task.tid, task.client))
 
+    def qsize(self) -> int:
+        return len(self.events)
+
 
 class StreamSource(RequestSource):
     def __init__(self, stream, task_factory):
         """``stream``: iterable of (offset_seconds, Request); ``task_factory``
-        maps (request, now) -> Task (already registered with the executor)."""
+        maps (request, now) -> Task (already registered with the executor).
+
+        The stream is sorted by offset on construction (stable, so
+        same-offset requests keep their input order) — callers may hand
+        arrivals in any order without silently mis-ordering admissions
+        (property-tested with shuffled offsets in tests/test_traffic.py).
+        """
         self.pending = sorted(list(stream), key=lambda p: p[0])
         self.task_factory = task_factory
         self.i = 0
@@ -96,3 +109,6 @@ class StreamSource(RequestSource):
         self.i += 1
         req.arrival = off
         return self.task_factory(req, now)
+
+    def qsize(self) -> int:
+        return len(self.pending) - self.i

@@ -57,6 +57,10 @@ from repro.serving.runtime.sources import RequestSource, StreamSource
 
 _SENTINEL = object()
 
+# backpressure overflow policies for a bounded live intake (semantics in
+# repro.serving.traffic.control, which re-exports this as OVERFLOW_MODES)
+_OVERFLOW_MODES = ("reject", "shed-optional")
+
 
 # ---------------------------------------------------------------------------
 # SLO classes
@@ -129,6 +133,10 @@ class ServeSpec:
     policy_cost: Optional[float] = None
     charge_overhead: bool = False
     host_overhead: float = 0.0
+    # > 0: stream windowed ServiceSnapshot rows to the ``on_metrics``
+    # callback resource every `metrics_interval` service seconds
+    # (repro.serving.traffic.control)
+    metrics_interval: float = 0.0
 
     # -- round trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -173,6 +181,16 @@ class ServeSpec:
                 and self.default_slo not in self.slo_classes:
             raise ValueError(f"default_slo {self.default_slo!r} is not a "
                              f"defined SLO class")
+        if self.metrics_interval < 0:
+            raise ValueError("metrics_interval must be >= 0")
+        if self.source == "live":
+            bound = self.source_args.get("bound")
+            if bound is not None and int(bound) < 1:
+                raise ValueError("live source 'bound' must be >= 1")
+            ov = self.source_args.get("overflow")
+            if ov is not None and ov not in _OVERFLOW_MODES:
+                raise ValueError(f"live source overflow {ov!r} not in "
+                                 f"{_OVERFLOW_MODES}")
         return self
 
     def slo_class(self, name: Optional[str]) -> Optional[SLOClass]:
@@ -221,11 +239,19 @@ class StageExit:
 class ServiceMetrics(SimResult):
     """``SimResult`` plus the service-level dimensions: per-SLO-class
     breakdown, admission-control counts, cancellations, and the resolved
-    component keys.  ``to_json`` exports the whole structure."""
+    component keys.  ``to_json`` exports the whole structure.
+
+    ``miss_rate``/``accuracy`` keep the legacy semantics (a rejected
+    request counts as a miss); ``admitted_miss_rate`` /
+    ``admitted_accuracy`` score only what the service accepted — the
+    overload-control question is whether *admitted* work meets its
+    deadlines while rejects fail fast."""
     per_class: dict = dataclasses.field(default_factory=dict)
     rejected: int = 0
     capped: int = 0
     cancelled: int = 0
+    admitted_miss_rate: float = 0.0
+    admitted_accuracy: Optional[float] = None
     components: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self, *, per_request: bool = False, **kw) -> str:
@@ -245,7 +271,13 @@ class ResponseHandle:
     * ``stages()`` — iterate the request's anytime exits
       (:class:`StageExit`) as they land; the iterator ends when the
       request retires.  One-shot: exits are consumed.
-    * ``cancel()`` — best-effort; succeeds only before admission.
+    * ``cancel()`` — before admission: withdraws the request outright
+      (``result()`` raises ``CancelledError``).  After admission (a live
+      wall-clock service), the request's remaining *optional* stages are
+      shed — the engine pulls the depth target in to the mandatory part
+      and retires it at the next loop tick — and ``result()`` still
+      returns the deepest in-time exit (the anytime contract survives
+      cancellation).  Returns True when either took effect.
     """
 
     def __init__(self, service: "Service", request):
@@ -268,9 +300,23 @@ class ResponseHandle:
 
     def cancel(self) -> bool:
         with self._lock:
-            if self._event.is_set() or self._claimed:
+            if self._event.is_set():
                 return False
-            self._cancelled = True
+            if self._claimed:
+                task = self._task
+            else:
+                self._cancelled = True
+                task = None
+        if task is not None:
+            # admitted: shed the remaining optional stages (deadline
+            # pull-in) via the engine loop — wall-clock live only (a
+            # virtual-clock drain() admits and runs synchronously)
+            live = self._service._live
+            if live is None:
+                return False
+            self._service._n_cancelled += 1
+            live.core.request_pullin(task)
+            return True
         self._service._n_cancelled += 1
         self._service._submitted.discard(self)
         self._event.set()
@@ -344,6 +390,10 @@ class LiveSource(RequestSource):
             heapq.heappush(self._heap, (offset, self._n, request))
             self._n += 1
 
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
     def close(self) -> None:
         self._closed = True
 
@@ -376,10 +426,11 @@ class ServiceRecorder:
     intact while resolving futures, streaming stage exits, and collecting
     the uniform per-request records ``ServiceMetrics`` is built from."""
 
-    def __init__(self, service: "Service", inner, executor):
+    def __init__(self, service: "Service", inner, executor, streamer=None):
         self.service = service
         self.inner = inner
         self.executor = executor
+        self.streamer = streamer       # MetricsStreamer (traffic.control)
         self.records: list = []
         self.core = None               # set by Service._build
 
@@ -395,6 +446,8 @@ class ServiceRecorder:
 
     # -- engine hooks ----------------------------------------------------
     def on_stage(self, task, now: float) -> None:
+        if self.streamer is not None:
+            self.streamer.tick(now)
         h = self.service._handles.get(task.tid)
         if h is None:
             return
@@ -413,11 +466,16 @@ class ServiceRecorder:
         # already the true arrival
         t0 = self.service._req_arrivals.pop(task.tid, task.arrival)
         latency = now - t0
-        self.records.append(dict(
+        rec = dict(
             tid=task.tid, sample=task.sample, client=task.client, slo=slo,
             depth=task.executed, missed=missed, conf=conf, prediction=pred,
-            arrival=task.arrival, deadline=task.deadline,
-            latency=latency, rejected=rejected, weight=task.weight))
+            arrival=task.arrival, deadline=task.deadline, offset=t0,
+            rel_deadline=self.service._req_rels.pop(task.tid, None),
+            depth_cap=task.depth_cap,
+            latency=latency, rejected=rejected, weight=task.weight)
+        self.records.append(rec)
+        if self.streamer is not None:
+            self.streamer.observe(rec, now)
         self.service._slo_names.pop(task.tid, None)
         h = self.service._handles.pop(task.tid, None)
         if h is not None:
@@ -433,7 +491,12 @@ class ServiceRecorder:
     # -- aggregation -----------------------------------------------------
     def _base_fields(self, core) -> dict:
         if isinstance(self.inner, TableRecorder):
-            return dataclasses.asdict(self.inner.result(core))
+            d = dataclasses.asdict(self.inner.result(core))
+            # aggregates keep the golden-parity TableRecorder math, but the
+            # per-request rows are the uniform service records (offset /
+            # rel_deadline / slo / depth_cap — what trace replay needs)
+            d["per_request"] = self.records
+            return d
         recs = self.records
         n = len(recs)
         labels = self.service.resources.get("labels")
@@ -482,13 +545,39 @@ class ServiceRecorder:
                 n=n, miss_rate=c["missed"] / n, rejected=c["rejected"],
                 mean_depth=c["depth_sum"] / n,
                 mean_latency=c["latency_sum"] / n)
+        # backpressure rejects never became tasks: they appear in the
+        # rejected counters (total and per class), not in n_requests
+        for name, cnt in self.service._bp_per_class.items():
+            entry = per_class.setdefault(name, dict(
+                n=0, miss_rate=0.0, rejected=0, mean_depth=0.0,
+                mean_latency=0.0))
+            entry["rejected"] += cnt
+        adm_recs = [r for r in self.records if not r["rejected"]]
+        admitted_miss = (sum(r["missed"] for r in adm_recs) / len(adm_recs)
+                         if adm_recs else 0.0)
+        admitted_acc = None
+        if isinstance(self.inner, TableRecorder):
+            fin = [f for f in self.inner.finished if not f["rejected"]]
+            if fin:
+                admitted_acc = sum(f["correct"] for f in fin) / len(fin)
+        else:
+            labels = self.service.resources.get("labels")
+            if labels is not None and adm_recs:
+                admitted_acc = sum(
+                    r.get("prediction") is not None
+                    and r["prediction"] == labels[r["sample"]]
+                    for r in adm_recs) / len(adm_recs)
         adm = core.admission
         spec = self.service.spec
         return ServiceMetrics(
             **self._base_fields(core), per_class=per_class,
-            rejected=adm.rejected if adm is not None else 0,
-            capped=adm.capped if adm is not None else 0,
+            rejected=(adm.rejected if adm is not None else 0)
+            + self.service._n_bp_rejected,
+            capped=(adm.capped if adm is not None else 0)
+            + self.service._n_shed,
             cancelled=self.service._n_cancelled,
+            admitted_miss_rate=admitted_miss,
+            admitted_accuracy=admitted_acc,
             components=dict(policy=spec.policy, executor=spec.executor,
                             clock=spec.clock, source=spec.source))
 
@@ -521,10 +610,15 @@ class Service:
         self.executor = None
         self.clock = None
         self.responses: list = []       # device-mode legacy Response list
+        self.snapshots: list = []       # streamed metrics of the last run
         self._handles: dict = {}
         self._slo_names: dict = {}
         self._req_arrivals: dict = {}   # tid -> request (stream) arrival
+        self._req_rels: dict = {}       # tid -> relative deadline as issued
         self._n_cancelled = 0
+        self._n_bp_rejected = 0         # backpressure: rejected at submit()
+        self._n_shed = 0                # backpressure: depth shed at submit()
+        self._bp_per_class: dict = {}   # slo name -> backpressure rejects
         self._closed = False
         self._live: Optional[_Built] = None
         self._live_error: Optional[BaseException] = None
@@ -622,7 +716,13 @@ class Service:
                                   self.resources["correct_table"])
         else:
             inner = None
-        recorder = ServiceRecorder(self, inner, executor)
+        streamer = None
+        if spec.metrics_interval > 0:
+            # local import: the traffic subsystem layers on top of Service
+            from repro.serving.traffic.control import MetricsStreamer
+            streamer = MetricsStreamer(spec.metrics_interval,
+                                       self.resources.get("on_metrics"))
+        recorder = ServiceRecorder(self, inner, executor, streamer=streamer)
         pol = as_batch_policy(policy, tm, max_batch=max_batch,
                               charge_formation=charge_formation)
         core = EngineCore(pol, clock, executor, source, recorder,
@@ -631,6 +731,10 @@ class Service:
                           dispatch_overhead=spec.dispatch_overhead,
                           policy_cost=spec.policy_cost, max_batch=eff_mb)
         recorder.core = core
+        if streamer is not None:
+            streamer.bind(core, source,
+                          inner if isinstance(inner, TableRecorder) else None,
+                          service=self)
         # telemetry handles on the latest build (policy.sched_time, custom
         # executor counters, ...)
         self.policy, self.executor, self.clock = policy, executor, clock
@@ -674,12 +778,17 @@ class Service:
                 if slo.depth_cap is not None:
                     task.depth_cap = max(task.mandatory, slo.depth_cap)
                 self._slo_names[task.tid] = slo.name
+            if getattr(request, "_shed", False):
+                # backpressure shed-optional: admitted, but only the
+                # mandatory part survives (traffic.control semantics)
+                task.depth_cap = task.mandatory
             if hasattr(executor, "register"):
                 executor.register(task, request)
             # latency is measured from *request* arrival (the stream
             # offset), not admission time — a request queued behind a long
             # device window still pays its wait (legacy Response semantics)
             self._req_arrivals[task.tid] = request.arrival
+            self._req_rels[task.tid] = rel
             if handle is not None:
                 self._handles[task.tid] = handle
                 handle._task = task
@@ -709,6 +818,7 @@ class Service:
                 # compile before the clock starts (deadlines are ms-scale)
                 warmup(min(stream, key=lambda p: p[0])[1].inputs)
         built.core.run()
+        self._finish_streamer(built)
         self._last = built.recorder.result(built.core)
         return self._last
 
@@ -739,7 +849,13 @@ class Service:
                at: Optional[float] = None) -> ResponseHandle:
         """Admit one request (``source="live"``).  ``slo`` picks the SLO
         class (``spec.default_slo`` otherwise); ``at`` is the virtual
-        arrival offset for discrete-event services (defaults to 0)."""
+        arrival offset for discrete-event services (defaults to 0).
+
+        With a bounded intake (``source_args={"bound": N, "overflow":
+        ...}``; see ``repro.serving.traffic.control``), an over-bound
+        submission either returns an immediately-resolved *rejected*
+        handle (``"reject"``) or is admitted with its optional stages
+        shed (``"shed-optional"``)."""
         if self._closed:
             raise RuntimeError("service is closed")
         if self.spec.source != "live":
@@ -756,6 +872,13 @@ class Service:
         request.slo = slo if slo is not None else getattr(request, "slo",
                                                           None)
         handle = ResponseHandle(self, request)
+        bound = self.spec.source_args.get("bound")
+        if bound is not None and self._intake_depth() >= int(bound):
+            if self.spec.source_args.get("overflow",
+                                         "reject") == "reject":
+                return self._reject_overflow(handle, request, cls)
+            request._shed = True
+            self._n_shed += 1
         request._handle = handle
         self._submitted.add(handle)
         if self._is_realtime():
@@ -763,6 +886,26 @@ class Service:
             live.source.push(live.clock.now() if at is None else at, request)
         else:
             self._buffer.append((0.0 if at is None else float(at), request))
+        return handle
+
+    def _intake_depth(self) -> int:
+        """Pending (queued, not yet engine-admitted) live submissions."""
+        if not self._is_realtime():
+            return len(self._buffer)
+        return self._ensure_live().source.qsize()
+
+    def _reject_overflow(self, handle: ResponseHandle, request,
+                         cls: Optional[SLOClass]) -> ResponseHandle:
+        """Bounded-intake fail-fast: resolve the handle rejected without
+        the request ever reaching the engine."""
+        self._n_bp_rejected += 1
+        name = cls.name if cls is not None else None
+        if name is not None:
+            self._bp_per_class[name] = self._bp_per_class.get(name, 0) + 1
+        handle._resolve(ServiceResponse(
+            sample=request.sample, prediction=None, confidence=0.0,
+            depth=0, missed=True, latency=0.0, deadline=0.0, slo=name,
+            rejected=True))
         return handle
 
     def _is_realtime(self) -> bool:
@@ -788,6 +931,7 @@ class Service:
             if self._live_error is not None:
                 raise RuntimeError("serving engine failed while live") \
                     from self._live_error
+            self._finish_streamer(self._live)
             self._last = self._live.recorder.result(self._live.core)
             self._live = None
             return self._last
@@ -795,9 +939,16 @@ class Service:
             buf, self._buffer = self._buffer, []
             built = self._build(sorted(buf, key=lambda p: p[0]))
             built.core.run()
+            self._finish_streamer(built)
             self._last = built.recorder.result(built.core)
             return self._last
         return self._last if self._last is not None else self.metrics()
+
+    def _finish_streamer(self, built: _Built) -> None:
+        streamer = built.recorder.streamer
+        if streamer is not None:
+            streamer.flush(built.core.makespan)
+            self.snapshots = list(streamer.snapshots)
 
     def close(self) -> None:
         """Graceful shutdown: drain, then refuse further work."""

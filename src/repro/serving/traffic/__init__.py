@@ -1,0 +1,35 @@
+"""Traffic subsystem: open-loop arrival generators, trace record/replay,
+and overload control — ``repro.serving.traffic``.
+
+Everything plugs into the serving runtime through the registry front door
+(``register_source("traffic")`` / ``register_source("replay")``) and the
+``Service`` facade (backpressure + metrics streaming) — no core-loop
+changes.  Importing this package (``repro.serving`` does it) registers
+the source keys.
+"""
+from repro.serving.traffic.control import (OVERFLOW_MODES, MetricsStreamer,
+                                           ServiceSnapshot)
+from repro.serving.traffic.generators import (ARRIVAL_KINDS, ArrivalProcess,
+                                              DiurnalArrivals,
+                                              FlashCrowdArrivals,
+                                              MMPPArrivals, PoissonArrivals,
+                                              make_arrival_process)
+from repro.serving.traffic.mix import RequestMix, TrafficClass
+from repro.serving.traffic.scenarios import (SCENARIOS, SLO_CLASSES, Scenario,
+                                             get_scenario, nominal_rate,
+                                             scenario_spec)
+from repro.serving.traffic.source import TrafficSource
+from repro.serving.traffic.trace import (TraceEvent, TraceRecorder,
+                                         admission_signature,
+                                         arrival_signature, load_trace,
+                                         record_trace, replay_stream,
+                                         verify_replay)
+
+__all__ = ["ARRIVAL_KINDS", "ArrivalProcess", "PoissonArrivals",
+           "MMPPArrivals", "DiurnalArrivals", "FlashCrowdArrivals",
+           "make_arrival_process", "RequestMix", "TrafficClass",
+           "TrafficSource", "TraceEvent", "TraceRecorder", "record_trace",
+           "load_trace", "replay_stream", "arrival_signature",
+           "admission_signature", "verify_replay", "MetricsStreamer",
+           "ServiceSnapshot", "OVERFLOW_MODES", "SCENARIOS", "SLO_CLASSES",
+           "Scenario", "get_scenario", "nominal_rate", "scenario_spec"]
