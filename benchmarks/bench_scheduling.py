@@ -19,6 +19,12 @@ Figures reproduced (CPU-scale analog of CIFAR-10/ImageNet ResNet-3-stage):
            2x sustained overload / flash crowd / diurnal ramp, policies
            with and without admission control + shedding; includes the
            record/replay bit-for-bit regression check  [extension]
+  sharded  the device-sharded executor (repro.launch.sharded): modeled
+           goodput vs data-parallel mesh width under 2x overload scaled
+           to each width, plus the end-to-end device-sharded run on the
+           real anytime classifier through a traffic scenario with
+           bit-for-bit parity against device-batched on a 1x1 mesh
+           [extension]
 
 All rows print as CSV (name,metric,value triples per configuration) and are
 also returned as dicts (``SimResult.to_dict`` rows) for EXPERIMENTS.md
@@ -371,6 +377,140 @@ def traffic_claims(comp, replay):
     return claims
 
 
+# per-dispatch cross-replica sync cost (seconds) charged by the modeled
+# sharded sweep whenever dp > 1 — deliberately pessimistic vs ICI numbers
+SHARDED_COLLECTIVE = 2e-4
+
+
+def fig_sharded(conf, correct, dps=(1, 2, 4), n_requests=900,
+                e2e_requests=40, seed=0):
+    """The ``device-sharded`` executor (repro.launch.sharded), two parts.
+
+    **Modeled dp sweep** — virtual clock, oracle executor priced by
+    ``sharded_time_model(dp)``: each data-parallel width is offered the
+    ``2x-overload`` traffic scenario scaled to *its own* capacity (2x of
+    dp devices), with admission control on.  Goodput (completed
+    requests/s) must scale near-linearly in dp while admitted misses stay
+    near zero — the "server side actually scales with offered load" claim.
+
+    **End-to-end 1x1-mesh run** — ``ServeSpec(executor="device-sharded")``
+    on the real anytime classifier, driven by the ``steady`` traffic
+    scenario through the registry (``repro.launch.serve`` registers the
+    executor from outside the serving package).  On this host's
+    single-device fallback mesh the results must match
+    ``device-batched`` **bit-for-bit**; the per-request hidden-state
+    cache must be fully evicted at drain.  This is the CI leg: the full
+    sharded code path (mesh build, sharding constraints, dp-divisible
+    buckets, state cache) runs everywhere.
+    """
+    from repro.launch.sharded import sharded_time_model
+    from repro.serving.batch.batcher import BatchTimeModel
+    from repro.serving.traffic import scenario_spec
+    rows = []
+    st = _stage_times()
+    base_tm = BatchTimeModel.linear(st, DEFAULT_BUCKETS, marginal=0.15)
+    goodput, admitted_miss = {}, {}
+    for dp in dps:
+        tm_dp = sharded_time_model(base_tm, dp,
+                                   collective=SHARDED_COLLECTIVE)
+        spec = scenario_spec("2x-overload", policy="rtdeepiot",
+                             admission={"mode": "reject"}, stage_times=st,
+                             n_requests=n_requests, seed=seed)
+        # offered load scales with the provisioned width: every dp level
+        # faces 2x of *its own* capacity, so goodput measures scaling,
+        # not saturation against a fixed arrival rate
+        spec.source_args["arrival"]["rate"] *= dp
+        spec.batching = {}               # the time_model resource prices it
+        res = Service.from_spec(spec, conf_table=conf, correct_table=correct,
+                                time_model=tm_dp).run()
+        _emit(rows, "sharded", f"dp={dp}", "rtdeepiot-admit", res)
+        goodput[dp] = res.throughput
+        admitted_miss[dp] = res.admitted_miss_rate
+    e2e = _sharded_e2e(rows, n_requests=e2e_requests, seed=seed)
+    return rows, dict(goodput=goodput, admitted_miss=admitted_miss,
+                      dps=tuple(dps)), e2e
+
+
+def _sharded_e2e(rows, n_requests=40, seed=0):
+    """Real-model leg of the sharded figure: device-sharded vs
+    device-batched on the same traffic scenario stream, virtual clock."""
+    import dataclasses
+
+    import jax
+
+    import repro.launch.serve  # noqa: F401 — registers device-sharded
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.traffic import scenario_spec
+
+    cfg = get_config("anytime-classifier")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    pool = rng.normal(size=(48, 1, 16, 32)).astype(np.float32)
+    labels = rng.integers(0, cfg.vocab_size, size=48)
+    st = (0.002, 0.003, 0.004)
+    base = scenario_spec(
+        "steady", policy="rtdeepiot",
+        policy_args={"predictor": "exp", "prior_curve": [0.5, 0.7, 0.85]},
+        stage_times=st, n_requests=n_requests, seed=seed)
+    base.batching = {"buckets": [1, 2, 4], "stage_times": list(st),
+                     "marginal": 0.25}
+    runs = {}
+    for ex, ea in (("device-batched", {}),
+                   ("device-sharded", {"dp": 2, "tp": 1})):
+        spec = dataclasses.replace(base, executor=ex, executor_args=ea)
+        svc = Service.from_spec(
+            spec, cfg=cfg, params=params, n_samples=len(pool), labels=labels,
+            traffic_inputs=lambda s: {"features": pool[s]})
+        res = svc.run()
+        _emit(rows, "sharded", "e2e", ex, res)
+        runs[ex] = (svc, res)
+
+    def key(recs):
+        return [(r["sample"], r["prediction"], r["conf"], r["depth"],
+                 r["missed"]) for r in recs]
+    sx = runs["device-sharded"][0].executor
+    parity = key(runs["device-batched"][1].per_request) \
+        == key(runs["device-sharded"][1].per_request)
+    print(f"sharded,e2e,parity,mesh={sx.dp}x{sx.tp},"
+          f"fallback={sx.fallback},bitwise={parity}")
+    return dict(mesh=[sx.dp, sx.tp], fallback=sx.fallback, parity=parity,
+                cache=sx.cache_stats(), n_requests=n_requests,
+                served=runs["device-sharded"][1].n_requests)
+
+
+def sharded_claims(modeled, e2e):
+    """Headline check for the sharded executor: goodput scales >= 0.6x
+    linearly in dp at < 1% admitted misses under per-width 2x overload,
+    and the end-to-end 1x1-mesh run matches device-batched bit-for-bit
+    with a fully-evicted hidden-state cache."""
+    dps = sorted(modeled["goodput"])
+    g = modeled["goodput"]
+    monotone = all(g[a] <= g[b] * 1.02 for a, b in zip(dps, dps[1:]))
+    scaling = g[dps[-1]] / max(g[dps[0]], 1e-9)
+    miss_max = max(modeled["admitted_miss"].values())
+    cache_clean = e2e["cache"]["live"] == 0 \
+        and e2e["cache"]["evictions"] >= e2e["n_requests"]
+    # parity is bitwise only where both runs use one device — a real
+    # multi-device mesh reorders float reductions
+    parity_req = (not e2e["fallback"]) and e2e["mesh"] != [1, 1]
+    claims = {
+        "sharded_collective_s": SHARDED_COLLECTIVE,
+        "sharded_goodput_by_dp": {str(d): round(g[d], 1) for d in dps},
+        "sharded_scaling": round(scaling, 2),
+        "sharded_admitted_miss_max": round(miss_max, 4),
+        "sharded_e2e_mesh": e2e["mesh"],
+        "sharded_e2e_parity_bitwise": bool(e2e["parity"]),
+        "sharded_e2e_cache": e2e["cache"],
+        "sharded_claim_met": bool(
+            monotone and scaling >= 0.6 * dps[-1] and miss_max < 0.01
+            and (e2e["parity"] or parity_req) and cache_clean
+            and e2e["served"] == e2e["n_requests"]),
+    }
+    print("SHARDED CLAIMS:", claims)
+    return claims
+
+
 def summarize_claims(all_rows):
     """Validate the paper's headline claims on our reproduction."""
     byfig = {}
@@ -485,10 +625,14 @@ def main(argv=None):
         rows += arows
         trows, tcomp, replay = fig_traffic(conf, correct, n_requests=150)
         rows += trows
+        srows, smodeled, se2e = fig_sharded(conf, correct, n_requests=150,
+                                            e2e_requests=12)
+        rows += srows
         claims = summarize_claims(rows)
         claims.update(batch_claims(speedups))
         claims.update(async_claims(comp))
         claims.update(traffic_claims(tcomp, replay))
+        claims.update(sharded_claims(smodeled, se2e))
         print(f"SMOKE OK: {len(rows)} rows")
         return rows, claims
 
@@ -504,10 +648,13 @@ def main(argv=None):
     rows += arows
     trows, tcomp, replay = fig_traffic(conf, correct)
     rows += trows
+    srows, smodeled, se2e = fig_sharded(conf, correct)
+    rows += srows
     claims = summarize_claims(rows)
     claims.update(batch_claims(speedups))
     claims.update(async_claims(comp))
     claims.update(traffic_claims(tcomp, replay))
+    claims.update(sharded_claims(smodeled, se2e))
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "scheduling_results.json"), "w") as f:
         json.dump({"rows": rows, "claims": claims}, f, indent=1)

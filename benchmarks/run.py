@@ -1,6 +1,12 @@
 """Benchmark orchestrator: one entry per paper table/figure + the system
 benches.  ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 
+Every scheduling engine is declared as a ``ServeSpec`` and run through
+``repro.serving.Service`` (see docs/serving-api.md) — the scheduling
+block covers the paper figures plus the ``batch`` / ``async`` /
+``traffic`` / ``sharded`` serving-extension figures and records their
+claims in ``artifacts/scheduling_results.json``.
+
 Prints ``name,us_per_call,derived`` style CSV blocks per bench.
 """
 from __future__ import annotations
@@ -13,7 +19,8 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="scheduling benches with fewer requests")
+                    help="ServeSpec-driven scheduling benches with fewer "
+                         "requests per figure")
     ap.add_argument("--only", default=None,
                     choices=[None, "scheduling", "kernels", "roofline",
                              "ablations"])

@@ -2,12 +2,26 @@
 
 1. Build a tiny anytime model (3 stages + exit heads + confidences).
 2. Cast inference requests as imprecise-computation Tasks.
-3. Plan depths with the FPTAS DP (Algorithm 1), compare schedulers through
-   the one serving front door: a declarative ServeSpec run by Service.
+3. Plan depths with the FPTAS DP (Algorithm 1), then compare schedulers
+   through the one serving front door: a declarative ``ServeSpec`` naming
+   every component by registry key (policy / executor / clock / source),
+   run by ``repro.serving.Service``.  Swapping the ``executor`` key —
+   ``oracle`` here, ``device-batched`` / ``device-sharded`` in
+   examples/serve_anytime.py — is the only change between simulation and
+   real (sharded) serving; see docs/architecture.md and
+   docs/serving-api.md.
 
 Usage: PYTHONPATH=src python examples/quickstart.py
 """
 from __future__ import annotations
+
+import warnings
+
+# the examples are the ServeSpec front door's showcase — escalate the
+# legacy shims' warnings so a regression off it fails the examples-smoke
+# CI job instead of slipping through silently
+warnings.filterwarnings("error", message=r".*ServeSpec",
+                        category=DeprecationWarning)
 
 import jax
 import numpy as np

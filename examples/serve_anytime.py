@@ -10,8 +10,10 @@ Every engine is built through the public serving API: a declarative
 ``ServeSpec`` names the policy / executor / clock / source by registry key
 (``device-single`` = unbatched per-stage dispatch, ``device-batched`` =
 continuous micro-batching, ``pipeline_depth=2`` = pipelined async
-dispatch), and ``repro.serving.Service`` owns the engine lifecycle; the
-model params / stage fns / profiled time model ride along as resources.
+dispatch, ``device-sharded`` = the batched engine across a ``(dp, tp)``
+mesh with a 1x1 fallback on single-device hosts), and
+``repro.serving.Service`` owns the engine lifecycle; the model params /
+stage fns / profiled time model ride along as resources.
 
 Also writes artifacts/stage_times.npz so the simulation benchmarks use the
 profiled WCETs.
@@ -23,9 +25,17 @@ from __future__ import annotations
 
 import argparse
 import os
+import warnings
+
+# the examples must stay on the ServeSpec front door — escalate the legacy
+# shims' warnings so a regression fails the examples-smoke CI job
+warnings.filterwarnings("error", message=r".*ServeSpec",
+                        category=DeprecationWarning)
 
 import jax
 import numpy as np
+
+import repro.launch.serve  # noqa: F401 — registers device-sharded
 
 from repro.configs import get_config
 from repro.models import init_params
@@ -48,6 +58,10 @@ def main(argv=None):
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8],
                     help="pre-compiled batch-size buckets for the batched "
                          "engine")
+    ap.add_argument("--dp", type=int, default=2,
+                    help="data-parallel ways for the device-sharded engine "
+                         "(falls back to a 1x1 mesh when the host has "
+                         "fewer devices)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload, few profiling runs, no artifact "
                          "writes (CI job)")
@@ -118,15 +132,19 @@ def main(argv=None):
                                "prior_curve": [.5, .7, .85]}),
                 ("edf", {})]
 
-    def spec_for(policy, policy_args, *, batched, pipelined=False):
+    def spec_for(policy, policy_args, *, batched, pipelined=False,
+                 sharded=False):
         if batched:
             batching = {}            # priced by the profiled time_model
         else:
             batching = {"mode": "none",
                         "stage_times": [float(x) for x in wcet]}
+        executor = "device-sharded" if sharded else \
+            ("device-batched" if batched else "device-single")
         return ServeSpec(
             policy=policy, policy_args=policy_args,
-            executor="device-batched" if batched else "device-single",
+            executor=executor,
+            executor_args={"dp": args.dp, "tp": 1} if sharded else {},
             clock="wall", source="stream", batching=batching,
             host_overhead=host_overhead,
             pipeline_depth=2 if pipelined else 1)
@@ -152,6 +170,19 @@ def main(argv=None):
                                 time_model=time_model)
         svc.run(stream())
         results[f"pipelined-{name}"] = report(f"pipelined-{name}", svc)
+    # sharded across a (dp, tp) mesh (executor "device-sharded", registered
+    # by repro.launch.serve from outside the serving package); on a
+    # single-device host the mesh falls back to 1x1, so this leg exercises
+    # the full sharded path — mesh build, sharding constraints,
+    # dp-divisible buckets, device-resident state cache — everywhere
+    name, pargs = POLICIES[0]
+    svc = Service.from_spec(spec_for(name, pargs, batched=True, sharded=True),
+                            cfg=cfg, params=params, time_model=time_model)
+    svc.run(stream())
+    ex = svc.executor
+    results[f"sharded-{name}"] = report(
+        f"sharded{ex.dp}x{ex.tp}-{name}", svc)
+    assert ex.cache_stats()["live"] == 0      # state evicted on retire
     if args.smoke:
         assert all(len(r) == 3 for r in results.values())
         print(f"SMOKE OK: {len(results)} engine configs served "

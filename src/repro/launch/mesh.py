@@ -40,6 +40,31 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     return _mesh((n_data, n_model), ("data", "model"))
 
 
+def make_serving_mesh(dp: int = 1, tp: int = 1, *,
+                      axes=("data", "model"), require: bool = False):
+    """A ``(dp, tp)`` serving mesh: data-parallel batch rows over
+    ``axes[0]``, tensor-parallel weights within a stage over ``axes[1]``.
+
+    The ``device-sharded`` executor (registered by :mod:`repro.launch.serve`,
+    built in :mod:`repro.launch.sharded`) runs its stage fns over this mesh.
+    When the host has fewer than ``dp * tp`` devices the mesh **falls back
+    to 1x1** so the same ServeSpec runs everywhere (single-device CI
+    exercises the full sharded code path as a degenerate mesh); pass
+    ``require=True`` to raise instead — a production launcher should fail
+    loudly, not silently serve at 1/dp of the provisioned capacity.
+    """
+    dp, tp = int(dp), int(tp)
+    if dp < 1 or tp < 1:
+        raise ValueError(f"dp and tp must be >= 1, got dp={dp} tp={tp}")
+    n = len(jax.devices())
+    if dp * tp > n:
+        if require:
+            raise ValueError(f"serving mesh needs dp*tp={dp * tp} devices, "
+                             f"host has {n}")
+        dp = tp = 1
+    return _mesh((dp, tp), tuple(axes))
+
+
 # TPU v5e hardware model (roofline constants, per chip)
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

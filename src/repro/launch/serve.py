@@ -7,7 +7,7 @@ of RTDeepIoT's depth assignment.
 
 The decode loop runs through the public serving API: each *token* is one
 imprecise-computation request served by ``repro.serving.Service`` from a
-declarative ``ServeSpec``, with three launch-registered components proving
+declarative ``ServeSpec``, with four launch-registered components proving
 the registry's extension points (no core module touched):
 
 * policy ``conf-target`` — assign full depth, stop deepening the moment
@@ -19,7 +19,11 @@ the registry's extension points (no core module touched):
   dispatched depth is discarded when the target was already met;
 * source ``token-loop`` — a closed loop of one token at a time: retiring
   token *t* commits the chosen depth's cache, samples token *t+1* and
-  issues it as the next request.
+  issues it as the next request;
+* executor ``device-sharded`` (:mod:`repro.launch.sharded`) — the batched
+  classifier engine with its stage fns sharded over a ``(dp, tp)`` mesh
+  from :func:`repro.launch.mesh.make_serving_mesh`; falls back to a 1x1
+  mesh on single-device hosts so the same ServeSpec runs everywhere.
 
 ``--dry-run`` validates the spec against the registry and prints it as
 JSON without touching the model (the CI examples-smoke job).
@@ -152,6 +156,19 @@ def _make_decode(args, ctx):
     r = ctx.resources
     return DecodeExecutor(r["steps"], r["params"], r["cache"], r["tok"],
                           speculate=bool(args.get("speculate", False)))
+
+
+@register_executor("device-sharded")
+def _make_device_sharded(args, ctx):
+    """``device-batched`` across a ``(dp, tp)`` mesh: batch rows sharded
+    over ``dp``, stage weights over ``tp``, per-request hidden state cached
+    on device between stage dispatches.  args:
+    ``{"dp": ..., "tp": ..., "mesh": [dp_axis, tp_axis], "require": ...,
+    "collective": ...}`` (see :func:`repro.launch.sharded.
+    build_sharded_executor`); resources: ``cfg``, ``params``, optionally
+    ``stage_fns`` / ``mesh``."""
+    from repro.launch.sharded import build_sharded_executor
+    return build_sharded_executor(args, ctx)
 
 
 class TokenLoopSource:

@@ -40,10 +40,37 @@ source    ``closed-loop`` (§IV K-client workload), ``stream``
           ((offset, Request) list), ``live`` (``Service.submit`` queue)
 ========  =================================================================
 
-``repro.serving.traffic`` registers two more sources from outside this
-module (the extension-point proof at subsystem scale): ``traffic``
-(seeded open-loop arrival generators x per-class request mixes) and
-``replay`` (recorded JSONL traces re-injected bit-for-bit).
+Keys registered from *outside* this module (the extension-point proof —
+see ``docs/extending.md`` for the worked tutorial):
+
+* ``repro.serving.traffic`` — sources ``traffic`` (seeded open-loop
+  arrival generators x per-class request mixes) and ``replay`` (recorded
+  JSONL traces re-injected bit-for-bit);
+* ``repro.launch.serve`` — executor ``device-sharded`` (the batched
+  engine pjit-sharded over a ``(dp, tp)`` mesh, 1x1 fallback on
+  single-device hosts) plus the decode launcher's ``conf-target`` /
+  ``decode`` / ``token-loop``.
+
+Example — a custom policy, end to end:
+
+```python
+from repro.core.schedulers import EDF
+from repro.serving import ServeSpec, Service
+from repro.serving.registry import register_policy
+
+@register_policy("my-edf")
+def _make(args, ctx):
+    return EDF()
+
+import numpy as np
+conf = np.full((50, 3), 0.8); correct = conf > np.random.default_rng(0).random((50, 3))
+spec = ServeSpec(policy="my-edf",
+                 batching={"mode": "none", "stage_times": [0.01] * 3},
+                 source_args={"n_clients": 4, "d_lo": 0.02, "d_hi": 0.2,
+                              "n_requests": 40})
+res = Service.from_spec(spec, conf_table=conf, correct_table=correct).run()
+assert res.n_requests == 40
+```
 """
 from __future__ import annotations
 

@@ -8,7 +8,15 @@ instant the legacy engines stamped after ``block_until_ready``.
 
 Per-request state (input/hidden pytree, deepest in-time exit) lives here:
 the executor is the layer that owns device data, so the engines' old
-``_states`` dict moves in with it.
+``_states`` dict moves in with it.  That dict is the serving stack's
+hidden-state cache: a request's state is registered at admission,
+**persisted across stage dispatches** (each ``commit`` slices the
+request's row out of the batched stage output — a device-resident array,
+never copied to host between stages) and **evicted on retire** (the
+recorder pops it via ``pop_state``).  ``cache_stats()`` reports
+live/peak/evicted counts so tests and metrics can hold the cache to that
+lifecycle.  ``ShardedDeviceExecutor`` (:mod:`repro.launch.sharded`) runs
+the same contract with stage fns sharded over a device mesh.
 """
 from __future__ import annotations
 
@@ -37,15 +45,26 @@ class DeviceExecutor:
         self.time_model = time_model
         self.total_busy = 0.0           # host-observed device-busy seconds
         self.states: dict = {}          # tid -> [request, hidden/inputs, exit]
+        self.evictions = 0              # states popped on retire
+        self.peak_cached = 0            # high-water mark of live states
         self._running = None
         self._done = None
 
-    # -- request state -------------------------------------------------
+    # -- request state (the hidden-state cache) ------------------------
     def register(self, task, request) -> None:
+        """Admit ``task``'s state into the cache (raw inputs until the
+        first stage commits a hidden row)."""
         self.states[task.tid] = [request, request.inputs, None]
+        self.peak_cached = max(self.peak_cached, len(self.states))
 
     def pop_state(self, task):
+        """Evict on retire — the other end of the cache lifecycle."""
+        self.evictions += 1
         return self.states.pop(task.tid)
+
+    def cache_stats(self) -> dict:
+        return dict(live=len(self.states), peak=self.peak_cached,
+                    evictions=self.evictions)
 
     # -- Executor contract ---------------------------------------------
     @property

@@ -11,6 +11,9 @@ is the executor's business:
 * ``DeviceExecutor`` (``repro.serving.runtime.device``, jax) — real jitted
   stage functions on the accelerator; completion time is whenever
   ``block_until_ready`` returns on the wall clock.
+* ``ShardedDeviceExecutor`` (``repro.launch.sharded``, registered as
+  ``device-sharded`` from ``repro.launch.serve``) — the same contract with
+  stage fns sharded over a ``(dp, tp)`` device mesh.
 
 Contract (single in-flight batch — the device is one non-preemptive
 resource; pipelining overlaps *host* work with it, not device work with

@@ -115,6 +115,26 @@ class ServeSpec:
     ``admission``: ``{"mode": "reject"|"depth_cap", "headroom": 1.0}``
     (empty dict = no admission control).  ``slo_classes``: name ->
     ``{rel_deadline, utility_weight, depth_cap}``.
+
+    Full field reference: ``docs/serving-api.md`` (kept in sync by the
+    docs-check CI job).  Example — declare, round-trip, validate, run:
+
+    ```python
+    import numpy as np
+    from repro.serving import ServeSpec, Service
+
+    rng = np.random.default_rng(0)
+    conf = np.sort(rng.uniform(0.3, 1.0, (50, 3)), axis=1)
+    correct = rng.uniform(size=(50, 3)) < conf
+    spec = ServeSpec(policy="edf",
+                     batching={"mode": "none", "stage_times": [0.01] * 3},
+                     source_args={"n_clients": 4, "d_lo": 0.02,
+                                  "d_hi": 0.2, "n_requests": 20})
+    spec = ServeSpec.from_json(spec.to_json()).validate()
+    res = Service.from_spec(spec, conf_table=conf,
+                            correct_table=correct).run()
+    assert res.n_requests == 20
+    ```
     """
     policy: str = "rtdeepiot"
     policy_args: dict = dataclasses.field(default_factory=dict)
@@ -183,6 +203,8 @@ class ServeSpec:
                              f"defined SLO class")
         if self.metrics_interval < 0:
             raise ValueError("metrics_interval must be >= 0")
+        if self.executor == "device-sharded":
+            self._validate_sharded_args()
         if self.source == "live":
             bound = self.source_args.get("bound")
             if bound is not None and int(bound) < 1:
@@ -192,6 +214,36 @@ class ServeSpec:
                 raise ValueError(f"live source overflow {ov!r} not in "
                                  f"{_OVERFLOW_MODES}")
         return self
+
+    def _validate_sharded_args(self) -> None:
+        """Shape-level checks for ``executor="device-sharded"`` args (the
+        factory itself lives in :mod:`repro.launch.sharded`): dp/tp must be
+        whole parallelism factors, ``mesh`` two distinct axis names.  Fail
+        here, at spec time, not at first dispatch on a warm engine."""
+        # lazy: the factory (and its arg list) lives with the executor it
+        # validates; repro.launch.sharded does not import this module back
+        from repro.launch.sharded import SHARDED_ARGS
+        ea = self.executor_args
+        known = set(SHARDED_ARGS)
+        unknown = set(ea) - known
+        if unknown:
+            raise ValueError(f"unknown device-sharded executor_args: "
+                             f"{sorted(unknown)}; known: {sorted(known)}")
+        for key in ("dp", "tp"):
+            v = ea.get(key, 1)
+            if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+                raise ValueError(f"device-sharded {key!r} must be an "
+                                 f"integer >= 1, got {v!r}")
+        axes = ea.get("mesh")
+        if axes is not None:
+            if (not isinstance(axes, (list, tuple)) or len(axes) != 2
+                    or not all(isinstance(a, str) and a for a in axes)
+                    or axes[0] == axes[1]):
+                raise ValueError(
+                    "device-sharded 'mesh' must be two distinct axis names "
+                    f"[dp_axis, tp_axis], got {axes!r}")
+        if float(ea.get("collective", 0.0)) < 0:
+            raise ValueError("device-sharded 'collective' must be >= 0")
 
     def slo_class(self, name: Optional[str]) -> Optional[SLOClass]:
         if name is None:
@@ -278,6 +330,28 @@ class ResponseHandle:
       and retires it at the next loop tick — and ``result()`` still
       returns the deepest in-time exit (the anytime contract survives
       cancellation).  Returns True when either took effect.
+
+    Example — stream the anytime exits of one request:
+
+    ```python
+    import numpy as np
+    from repro.serving import ServeSpec, Service
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(1)
+    conf = np.sort(rng.uniform(0.5, 1.0, (10, 3)), axis=1)
+    correct = rng.uniform(size=(10, 3)) < conf
+    spec = ServeSpec(source="live", default_slo="gold",
+                     slo_classes={"gold": {"rel_deadline": 0.5}},
+                     batching={"mode": "none",
+                               "stage_times": [0.01] * 3})
+    with Service.from_spec(spec, conf_table=conf,
+                           correct_table=correct) as svc:
+        handle = svc.submit(Request(inputs=None, sample=0))
+        svc.drain()
+        exits = list(handle.stages())        # each in-time (pred, conf)
+        assert handle.result().depth == len(exits)
+    ```
     """
 
     def __init__(self, service: "Service", request):
@@ -601,6 +675,28 @@ class Service:
     not leak policy state across workloads); component *instances* passed
     as resources (``policy=``, ``executor=``, ``clock=``, ``source=``,
     ``admission=``) are reused as-is, skipping the registry.
+
+    Example — live mode on a virtual clock (submissions buffer, ``drain``
+    replays them discrete-event and resolves every handle):
+
+    ```python
+    import numpy as np
+    from repro.serving import ServeSpec, Service
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(0)
+    conf = np.sort(rng.uniform(0.5, 1.0, (10, 3)), axis=1)
+    correct = rng.uniform(size=(10, 3)) < conf
+    spec = ServeSpec(source="live", default_slo="gold",
+                     slo_classes={"gold": {"rel_deadline": 0.5}},
+                     batching={"mode": "none",
+                               "stage_times": [0.01] * 3})
+    with Service.from_spec(spec, conf_table=conf,
+                           correct_table=correct) as svc:
+        h = svc.submit(Request(inputs=None, sample=3))
+        metrics = svc.drain()
+        assert h.result().sample == 3 and metrics.n_requests == 1
+    ```
     """
 
     def __init__(self, spec: ServeSpec, resources: dict):
@@ -690,6 +786,11 @@ class Service:
         executor = self._component("executor", spec.executor,
                                    spec.executor_args, ctx)
         ctx.executor = executor
+        if ctx.time_model is not tm:
+            # an executor factory may refine the time model (device-sharded
+            # swaps in the dp-scaled bucket set); everything downstream —
+            # batcher, admission, §II-B deadline adjustment — prices with it
+            tm = ctx.time_model
         admission = self.resources.get("admission")
         if admission is None and spec.admission.get("mode") not in (None,
                                                                     "off"):

@@ -1,0 +1,154 @@
+"""docs-check: execute every fenced snippet, verify every internal link.
+
+The documentation gate behind the `docs-check` CI job:
+
+1. **Snippet execution** — every ```` ```python ```` fenced block in
+   ``docs/*.md`` and ``README.md``, plus the fenced examples embedded in
+   the public serving docstrings (``repro.serving.registry``,
+   ``repro.serving.traffic.generators``), is executed.  Blocks within one
+   file share a namespace (tutorials build up state); a block tagged
+   ```` ```python no-run ```` is syntax-checked only (illustrative
+   fragments: factory bodies, signatures).
+2. **Internal links** — every relative markdown link target in the
+   scanned files must exist on disk.
+3. **Field coverage** — ``docs/serving-api.md`` must mention every
+   ``ServeSpec`` field by name, so the reference table cannot drift from
+   the dataclass.
+
+Usage: ``PYTHONPATH=src python tools/check_docs.py [--quick]``
+(``--quick`` skips snippet execution — links and coverage only).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import re
+import sys
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md"))
+
+#: (module, [attrs]) whose docstring examples are part of the public
+#: contract — [] means the module docstring itself
+DOCSTRING_MODULES = (
+    ("repro.serving.registry", []),
+    ("repro.serving.traffic.generators", []),
+    ("repro.serving.service", ["ServeSpec", "Service", "ResponseHandle"]),
+)
+
+FENCE = re.compile(r"^```python([^\n`]*)\n(.*?)^```\s*$",
+                   re.MULTILINE | re.DOTALL)
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+
+
+def fenced_blocks(text: str):
+    """(info, code) for every ```python fenced block."""
+    return [(m.group(1).strip(), m.group(2)) for m in FENCE.finditer(text)]
+
+
+def run_blocks(label: str, blocks, failures: list) -> int:
+    """Execute ``blocks`` sequentially in one shared namespace."""
+    ns: dict = {"__name__": f"docs_check::{label}"}
+    n = 0
+    for i, (info, code) in enumerate(blocks):
+        where = f"{label} [snippet {i + 1}]"
+        try:
+            compiled = compile(code, where, "exec")
+        except SyntaxError:
+            failures.append((where, traceback.format_exc()))
+            continue
+        if "no-run" in info:
+            continue
+        try:
+            exec(compiled, ns)          # noqa: S102 — that's the point
+            n += 1
+        except Exception:               # noqa: BLE001 — reported, not fatal here
+            failures.append((where, traceback.format_exc()))
+    return n
+
+
+def check_links(path: str, text: str, failures: list) -> int:
+    n = 0
+    base = os.path.dirname(os.path.join(REPO, path))
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        n += 1
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            failures.append((path, f"broken link: {m.group(0)}"))
+    return n
+
+
+def check_spec_fields(failures: list) -> int:
+    from repro.serving import ServeSpec
+    with open(os.path.join(REPO, "docs", "serving-api.md")) as f:
+        text = f.read()
+    missing = [f.name for f in dataclasses.fields(ServeSpec)
+               if f"`{f.name}`" not in text]
+    if missing:
+        failures.append(("docs/serving-api.md",
+                         f"ServeSpec fields missing from the reference: "
+                         f"{missing}"))
+    return len(dataclasses.fields(ServeSpec))
+
+
+def docstring_blocks(modname: str, attrs):
+    import importlib
+    import inspect
+    mod = importlib.import_module(modname)
+
+    def blocks(obj):
+        return fenced_blocks(inspect.cleandoc(obj.__doc__ or ""))
+    if not attrs:
+        return [(f"{modname}.__doc__", blocks(mod))]
+    return [(f"{modname}.{a}.__doc__", blocks(getattr(mod, a)))
+            for a in attrs]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="links + field coverage only (no snippet runs)")
+    args = ap.parse_args(argv)
+
+    failures: list = []
+    ran = links = 0
+    for path in DOC_FILES:
+        with open(os.path.join(REPO, path)) as f:
+            text = f.read()
+        links += check_links(path, text, failures)
+        blocks = fenced_blocks(text)
+        if args.quick:
+            for i, (_, code) in enumerate(blocks):
+                try:
+                    compile(code, f"{path} [snippet {i + 1}]", "exec")
+                except SyntaxError:
+                    failures.append((f"{path} [snippet {i + 1}]",
+                                     traceback.format_exc()))
+            continue
+        ran += run_blocks(path, blocks, failures)
+    fields = check_spec_fields(failures)
+    if not args.quick:
+        for modname, attrs in DOCSTRING_MODULES:
+            for label, blocks in docstring_blocks(modname, attrs):
+                if not blocks:
+                    failures.append((label, "no fenced example snippet"))
+                ran += run_blocks(label, blocks, failures)
+
+    for where, err in failures:
+        print(f"FAIL {where}\n{err}\n", file=sys.stderr)
+    status = "FAILED" if failures else "OK"
+    print(f"docs-check {status}: {len(DOC_FILES)} files, {ran} snippets "
+          f"executed, {links} links, {fields} ServeSpec fields checked, "
+          f"{len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
