@@ -30,6 +30,11 @@ from repro.serving.traffic import (MetricsStreamer, RequestMix, Scenario,
                                    TrafficSource, load_trace,
                                    make_arrival_process, record_trace,
                                    scenario_spec, verify_replay)
+# the durable request plane registers "durable" and "frontdoor" —
+# see repro.serving.plane for the full surface
+from repro.serving.plane import (DurableQueue, FrontDoor, Journal, Record,
+                                 journal_stats, recover, scan_journal,
+                                 verify_recovery)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
@@ -46,4 +51,6 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "MetricsStreamer", "RequestMix", "Scenario", "ServiceSnapshot",
            "TraceRecorder", "TrafficSource", "load_trace",
            "make_arrival_process", "record_trace", "scenario_spec",
-           "verify_replay"]
+           "verify_replay",
+           "DurableQueue", "FrontDoor", "Journal", "Record",
+           "journal_stats", "recover", "scan_journal", "verify_recovery"]

@@ -41,6 +41,8 @@ class Request:
     client: int = 0
     arrival: float = 0.0           # wall time, filled by the engine
     slo: Optional[str] = None      # SLO class name (repro.serving.service)
+    tenant: Optional[str] = None   # tenant label (repro.serving.plane)
+    request_id: Optional[str] = None  # idempotence key (durable plane)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,52 @@
+"""repro.serving.plane — the durable request plane.
+
+Everything between a client and the scheduling engine that must survive
+a crash: a write-ahead :class:`Journal` of request lifecycle
+:class:`Record`\\ s, a :class:`DurableQueue` making submission
+idempotent on ``request_id``, a multi-tenant :class:`FrontDoor`
+(token-bucket quotas + deficit-round-robin fair queueing), and
+:func:`recover` — full-redo crash recovery that reproduces the
+uncrashed run's admission decisions bit-for-bit under the virtual
+clock (:func:`verify_recovery` checks it).
+
+Registered from outside the runtime core, like ``traffic`` and the
+sharded executor: importing this package registers the ``"durable"``
+and ``"frontdoor"`` source keys.
+"""
+from repro.serving.plane.frontdoor import (
+    FrontDoor,
+    FrontDoorSource,
+    TokenBucket,
+)
+from repro.serving.plane.health import journal_stats
+from repro.serving.plane.journal import Journal, JournalObserver, scan_journal
+from repro.serving.plane.queue import (
+    DurableQueue,
+    RecoveryResult,
+    recover,
+    verify_recovery,
+)
+from repro.serving.plane.records import (
+    RECORD_KINDS,
+    RECORD_VERSION,
+    TERMINAL_KINDS,
+    Record,
+)
+
+__all__ = [
+    "RECORD_KINDS",
+    "RECORD_VERSION",
+    "TERMINAL_KINDS",
+    "DurableQueue",
+    "FrontDoor",
+    "FrontDoorSource",
+    "Journal",
+    "JournalObserver",
+    "Record",
+    "RecoveryResult",
+    "TokenBucket",
+    "journal_stats",
+    "recover",
+    "scan_journal",
+    "verify_recovery",
+]

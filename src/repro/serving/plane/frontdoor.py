@@ -1,0 +1,329 @@
+"""FrontDoor: multi-tenant admission — quotas + weighted fair queueing.
+
+The layer between clients and the engine (``spec.source="frontdoor"``):
+
+* **Token-bucket quotas** — ``spec.tenants[name] = {"rate": r, "burst":
+  b, "weight": w}``: an over-quota submission is refused at the door
+  (immediately-resolved rejected handle, journaled as REJECT when a
+  journal is attached) before it costs the engine anything.
+* **Weighted fair queueing** — :class:`FrontDoorSource` holds one FIFO
+  per tenant and releases requests to the engine by deficit round-robin
+  (quantum proportional to tenant weight; an emptied queue forfeits its
+  credit), optionally metered by a ``run_queue`` cap on requests in the
+  engine at once — the knob that turns release order into *service*
+  order under overload.  ``discipline="fifo"`` releases in global
+  arrival order instead (the baseline the benchmark starves).
+* **Weight composition** — tenant weight multiplies the SLO class's
+  ``utility_weight`` into ``Task.weight``, so the FPTAS utility
+  objective sees tenant priority end to end.
+
+Works on both clocks like ``source="live"``: wall clock pushes into the
+source behind a background engine; virtual clock buffers submissions
+and ``drain()`` replays them through the same DRR arbitration
+discrete-event (deterministic — what the recovery and fairness claims
+are checked against).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from collections import deque
+from typing import Optional
+
+from repro.serving.plane.journal import Journal
+from repro.serving.plane.queue import DurableQueue
+from repro.serving.registry import register_source
+from repro.serving.runtime.sources import RequestSource
+from repro.serving.service import ResponseHandle, Service
+
+_EPS = 1e-12
+
+DISCIPLINES = ("drr", "fifo")
+
+#: queue name for requests submitted without a tenant label
+DEFAULT_TENANT = "default"
+
+
+class TokenBucket:
+    """Deterministic token bucket: refill is computed from the submit
+    timestamps themselves (virtual or wall), so a replayed submission
+    sequence meets identical quota decisions."""
+
+    def __init__(self, rate: float, burst: float):
+        if rate <= 0:
+            raise ValueError("rate must be > 0")
+        if burst < 1:
+            raise ValueError("burst must be >= 1")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t = None
+
+    def allow(self, t: float) -> bool:
+        if self._t is not None and t > self._t:
+            self.tokens = min(self.burst,
+                              self.tokens + (t - self._t) * self.rate)
+        self._t = t if self._t is None else max(self._t, t)
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+class FrontDoorSource(RequestSource):
+    """Per-tenant queues released to the engine by DRR (or global FIFO).
+
+    ``run_queue`` caps requests concurrently inside the engine (released
+    minus retired); releases beyond it wait in their tenant queue — the
+    backlog the fair-queueing discipline arbitrates.  Thread-safe like
+    ``LiveSource`` (wall-clock pushes race the engine thread).
+    """
+
+    live = True                        # Service.submit may target this source
+
+    def __init__(self, task_factory, clock, *, tenants: dict = None,
+                 discipline: str = "drr", quantum: float = 1.0,
+                 run_queue: Optional[int] = None, poll: float = 0.002):
+        if discipline not in DISCIPLINES:
+            raise ValueError(f"discipline {discipline!r} not in "
+                             f"{DISCIPLINES}")
+        self.task_factory = task_factory
+        self.clock = clock
+        self.discipline = discipline
+        self.quantum = float(quantum)
+        self.run_queue = int(run_queue) if run_queue is not None else None
+        self.poll = float(poll)
+        self._weights = {name: float(cfg.get("weight", 1.0))
+                         for name, cfg in (tenants or {}).items()}
+        self._queues: dict = {name: deque() for name in sorted(self._weights)}
+        self._order: list = sorted(self._weights)
+        self._budget: dict = {name: 0.0 for name in self._order}
+        self._cursor = 0
+        self._granted = False          # cursor's queue got its quantum
+                                       # this visit already
+        self._n = 0                    # push tiebreak (global arrival order)
+        self._inflight = 0             # released to the engine, not retired
+        self.released = 0
+        self._lock = threading.Lock()
+        # a virtual-clock build is always fed its whole stream up front
+        # (Service.drain), so the intake starts closed — the loop must
+        # terminate when the queues drain
+        self._closed = not getattr(clock, "realtime", False)
+
+    # -- intake --------------------------------------------------------
+    def push(self, offset: float, request) -> None:
+        tenant = getattr(request, "tenant", None) or DEFAULT_TENANT
+        with self._lock:
+            q = self._queues.get(tenant)
+            if q is None:
+                q = self._queues[tenant] = deque()
+                self._order.append(tenant)
+                self._budget[tenant] = 0.0
+            q.append((float(offset), self._n, request))
+            self._n += 1
+
+    def close(self) -> None:
+        self._closed = True
+
+    # -- source contract -----------------------------------------------
+    def _gated(self) -> bool:
+        return self.run_queue is not None and self._inflight >= self.run_queue
+
+    def has_pending(self) -> bool:
+        with self._lock:
+            return any(self._queues.values()) or not self._closed
+
+    def next_time(self) -> float:
+        with self._lock:
+            heads = [q[0][0] for q in self._queues.values() if q]
+            if not heads or self._gated():
+                # gated or empty: a retirement (which frees a slot) or a
+                # push reopens the tap; the wall clock polls for it, the
+                # virtual loop sees it at the next completion event
+                return math.inf if self._closed \
+                    else self.clock.now() + self.poll
+            return min(heads)
+
+    def pop(self, now: float):
+        with self._lock:
+            if self._gated():
+                return None
+            tenant = self._pick(now)
+            if tenant is None:
+                return None
+            off, _, req = self._queues[tenant].popleft()
+        req.arrival = off
+        task = self.task_factory(req, now)
+        if task is not None:
+            with self._lock:
+                self._inflight += 1
+                self.released += 1
+        return task
+
+    def on_retire(self, task, now: float) -> None:
+        with self._lock:
+            self._inflight = max(0, self._inflight - 1)
+
+    def qsize(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    def tenant_depths(self) -> dict:
+        with self._lock:
+            return {t: len(q) for t, q in self._queues.items() if q}
+
+    # -- arbitration ----------------------------------------------------
+    def _eligible(self, now: float) -> list:
+        return [t for t in self._order
+                if self._queues[t] and self._queues[t][0][0] <= now + _EPS]
+
+    def _pick(self, now: float) -> Optional[str]:
+        elig = self._eligible(now)
+        if not elig:
+            return None
+        if self.discipline == "fifo":
+            return min(elig, key=lambda t: self._queues[t][0][:2])
+        return self._drr_pick(set(elig))
+
+    def _advance(self) -> None:
+        self._cursor += 1
+        self._granted = False
+
+    def _drr_pick(self, elig: set) -> Optional[str]:
+        """Deficit round-robin, one release per call: the cursor parks on
+        a tenant while its credit lasts (so consecutive releases drain
+        one queue up to its quantum), grants the quantum at most once per
+        cursor visit (the ``_granted`` latch — without it every pop()
+        re-grants the head queue and the round-robin degenerates to
+        FIFO), and zeroes the credit of emptied queues (idle tenants
+        accumulate nothing)."""
+        n = len(self._order)
+        for _ in range(2 * n + 1):
+            t = self._order[self._cursor % n]
+            if not self._queues[t]:
+                self._budget[t] = 0.0
+                self._advance()
+                continue
+            if t not in elig:
+                self._advance()
+                continue
+            if self._budget[t] >= 1.0:
+                self._budget[t] -= 1.0
+                return t
+            if not self._granted:
+                self._granted = True
+                self._budget[t] += self.quantum * self._weights.get(t, 1.0)
+                if self._budget[t] >= 1.0:
+                    self._budget[t] -= 1.0
+                    return t
+            self._advance()
+        return sorted(elig)[0]         # degenerate quanta: don't stall
+
+
+class FrontDoor:
+    """The tenant-facing submission surface over one ``Service``.
+
+    ``journal=`` makes submissions durable (and idempotent on
+    ``request_id``) through a :class:`DurableQueue`; without it the door
+    still enforces quotas and fair queueing.  ``stats()`` is the
+    in-process health surface (``tools/planectl.py`` reads the same
+    numbers offline from the journal)."""
+
+    def __init__(self, service: Service, *, journal: Optional[Journal] = None):
+        if service.spec.source != "frontdoor":
+            raise ValueError("FrontDoor needs spec.source='frontdoor' "
+                             f"(got {service.spec.source!r})")
+        self.service = service
+        self.journal = journal
+        self.queue = DurableQueue(service, journal) \
+            if journal is not None else None
+        self.tenants = dict(service.spec.tenants or {})
+        self._buckets = {
+            name: TokenBucket(float(cfg["rate"]),
+                              float(cfg.get("burst", max(1.0,
+                                                         float(cfg["rate"])))))
+            for name, cfg in self.tenants.items() if cfg.get("rate")}
+        self.counts: dict = {}         # tenant -> submitted / quota_rejected
+
+    def submit(self, request, *, tenant: Optional[str] = None,
+               slo: Optional[str] = None, at: Optional[float] = None,
+               request_id: Optional[str] = None) -> ResponseHandle:
+        if tenant is not None:
+            request.tenant = tenant
+        if request_id is not None:
+            request.request_id = request_id
+        name = getattr(request, "tenant", None) or DEFAULT_TENANT
+        c = self.counts.setdefault(name,
+                                   dict(submitted=0, quota_rejected=0))
+        c["submitted"] += 1
+        t_sub = at
+        if t_sub is None:
+            t_sub = (self.service._ensure_live().clock.now()
+                     if self.service._is_realtime() else 0.0)
+        bucket = self._buckets.get(name)
+        if bucket is not None and not bucket.allow(t_sub):
+            return self._quota_reject(request, name, slo, t_sub, c)
+        if self.queue is not None:
+            return self.queue.submit(request, slo=slo, at=at)
+        return self.service.submit(request, slo=slo, at=at)
+
+    def _quota_reject(self, request, tenant: str, slo, t_sub: float,
+                      counts: dict) -> ResponseHandle:
+        counts["quota_rejected"] += 1
+        svc = self.service
+        svc._tenant_rejects[tenant] = svc._tenant_rejects.get(tenant, 0) + 1
+        rid = getattr(request, "request_id", None)
+        if self.journal is not None and rid is not None:
+            self.journal.append(
+                "REJECT", offset=t_sub, sample=request.sample,
+                client=request.client,
+                slo=slo if slo is not None else getattr(request, "slo", None),
+                tenant=tenant, request_id=rid,
+                outcome=dict(rejected=True, missed=True, depth=0,
+                             quota=True), sync=True)
+        cls = svc.spec.slo_class(slo if slo is not None
+                                 else getattr(request, "slo", None))
+        return svc._reject_overflow(ResponseHandle(svc, request), request,
+                                    cls)
+
+    def drain(self):
+        return self.service.drain()
+
+    def stats(self) -> dict:
+        """In-process health: per-tenant counters, queue depths, journal
+        durability lag."""
+        svc = self.service
+        src = svc._live.source if svc._live is not None else None
+        depths = src.tenant_depths() \
+            if src is not None and hasattr(src, "tenant_depths") else {}
+        out = dict(
+            tenants={t: dict(c) for t, c in self.counts.items()},
+            queued=depths,
+            queue_depth=(src.qsize() if src is not None else 0)
+            + len(svc._buffer),
+            inflight=getattr(src, "_inflight", 0) if src is not None else 0,
+        )
+        if self.journal is not None:
+            out["journal"] = dict(lag=self.journal.lag(),
+                                  next_seq=self.journal.next_seq,
+                                  counts=dict(self.journal.counts))
+        return out
+
+
+@register_source("frontdoor")
+def _make_frontdoor(args: dict, ctx):
+    """Multi-tenant fair-queueing intake.  ``source_args``:
+    ``discipline`` ("drr"/"fifo"), ``quantum``, ``run_queue`` (engine
+    concurrency cap), ``poll`` (wall-clock poll seconds)."""
+    src = FrontDoorSource(ctx.task_factory, ctx.clock,
+                          tenants=ctx.spec.tenants,
+                          discipline=args.get("discipline", "drr"),
+                          quantum=float(args.get("quantum", 1.0)),
+                          run_queue=args.get("run_queue"),
+                          poll=float(args.get("poll", 0.002)))
+    for off, req in (ctx.stream or []):
+        src.push(off, req)
+    return src
+
+
+_make_frontdoor.live = True           # Service.submit may target this key

@@ -1,0 +1,65 @@
+"""Offline health/stats over a journal directory.
+
+The journal is the durable plane's source of truth, so the health
+surface needs no live process: :func:`journal_stats` folds the segments
+into queue depth (journaled SUBMITs with no terminal record yet),
+per-tenant admit/retire/reject counts, and segment/lag figures.
+``tools/planectl.py`` is the CLI over this module; a live process gets
+the same numbers (plus the in-memory queue state) from
+``FrontDoor.stats()``.
+"""
+from __future__ import annotations
+
+from repro.serving.plane.journal import _segment_paths, scan_journal
+from repro.serving.plane.records import TERMINAL_KINDS
+
+
+def journal_stats(path: str) -> dict:
+    """Fold the journal at ``path`` into a health/stats dict:
+
+    ``pending`` — request_ids durably SUBMITted but not yet terminal
+    (what :func:`~repro.serving.plane.queue.recover` would redeliver);
+    ``per_tenant`` — submitted/admitted/retired/rejected/staged counts
+    plus per-tenant pending depth; ``counts`` — records by kind;
+    ``segments``/``records``/``last_seq`` — journal shape.
+    """
+    header, records = scan_journal(path)
+    counts: dict = {}
+    per_tenant: dict = {}
+    submitted: dict = {}               # request_id -> tenant
+    terminal: set = set()
+    last_seq = -1
+    for r in records:
+        counts[r.kind] = counts.get(r.kind, 0) + 1
+        if r.seq is not None:
+            last_seq = max(last_seq, r.seq)
+        tenant = r.tenant or "default"
+        t = per_tenant.setdefault(tenant, dict(
+            submitted=0, admitted=0, staged=0, retired=0, rejected=0,
+            pending=0))
+        key = {"SUBMIT": "submitted", "ADMIT": "admitted",
+               "STAGE": "staged", "RETIRE": "retired",
+               "REJECT": "rejected"}.get(r.kind)
+        if key is not None:
+            t[key] += 1
+        if r.request_id is not None:
+            if r.kind == "SUBMIT":
+                submitted[r.request_id] = tenant
+            elif r.kind in TERMINAL_KINDS:
+                terminal.add(r.request_id)
+    pending = sorted(rid for rid in submitted if rid not in terminal)
+    for rid in pending:
+        per_tenant[submitted[rid]]["pending"] += 1
+    return dict(
+        path=path,
+        version=header.get("version"),
+        source=header.get("source"),
+        has_spec="spec" in header,
+        segments=len(_segment_paths(path)),
+        records=len(records),
+        last_seq=last_seq,
+        counts=counts,
+        queue_depth=len(pending),
+        pending=pending,
+        per_tenant=per_tenant,
+    )

@@ -1,0 +1,278 @@
+"""Write-ahead journal: the durable plane's on-disk request log.
+
+A :class:`Journal` is a directory of JSONL segments::
+
+    journal_dir/
+      wal-000000.jsonl     {"type": "header", "version": 2, "segment": 0,
+                            "source": "...", "spec": {...}}
+                           {"kind": "SUBMIT", "seq": 0, ...}
+                           ...
+      wal-000001.jsonl     (rotated after ``segment_records`` records)
+
+generalizing the PR-4 trace format (one header line, then
+:class:`~repro.serving.plane.records.Record` lines) into an *append*
+log: ``seq`` is a monotonic offset across segments, appends are
+idempotent (a second record with the same ``(kind, request_id)`` is a
+no-op — what makes crash recovery re-runnable), and fsyncs are batched
+(``fsync_every``) with ``sync=True`` available for the points that must
+be durable before the caller proceeds — SUBMIT before the handle is
+returned, RETIRE before the handle resolves.
+
+Reopening an existing directory replays the segments to rebuild the
+dedup index and continue the ``seq`` counter — the crash-recovery path
+(:func:`repro.serving.plane.queue.recover`) appends through the same
+journal it reads, and only genuinely-new records land.
+
+:func:`scan_journal` tolerates a torn final line (a crash mid-append):
+the partial tail is ignored, everything before it is intact — records
+are only ever appended, never rewritten.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+from repro.serving.plane.records import RECORD_VERSION, Record
+
+_SEGMENT_FMT = "wal-{:06d}.jsonl"
+
+
+def _segment_paths(path: str) -> list:
+    try:
+        names = sorted(n for n in os.listdir(path)
+                       if n.startswith("wal-") and n.endswith(".jsonl"))
+    except FileNotFoundError:
+        return []
+    return [os.path.join(path, n) for n in names]
+
+
+def _read_segment(seg_path: str, last: bool) -> tuple:
+    """(header_or_None, [Record]) of one segment; a torn final line is
+    tolerated only on the *last* segment (the only place a crash can
+    leave one)."""
+    header, records = None, []
+    with open(seg_path) as f:
+        lines = f.read().split("\n")
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            d = json.loads(line)
+        except json.JSONDecodeError:
+            if last and i == len(lines) - 1:
+                break                  # torn tail from a mid-append crash
+            raise ValueError(f"corrupt journal line {i} in {seg_path!r}")
+        if d.get("type") == "header":
+            header = d
+        else:
+            records.append(Record.from_dict(d))
+    return header, records
+
+
+def scan_journal(path: str) -> tuple:
+    """Read every segment -> (header dict, [Record] in seq order)."""
+    segs = _segment_paths(path)
+    if not segs:
+        raise FileNotFoundError(f"no journal segments under {path!r}")
+    header, records = {}, []
+    for i, seg in enumerate(segs):
+        h, recs = _read_segment(seg, last=(i == len(segs) - 1))
+        if h is not None and not header:
+            header = h
+        records.extend(recs)
+    records.sort(key=lambda r: (r.seq if r.seq is not None else -1))
+    return header, records
+
+
+class Journal:
+    """Append-only, segment-rotated, fsync-batched record log.
+
+    ``spec`` (a ``ServeSpec``) goes into every segment header so
+    recovery can rebuild the exact engine; ``fsync_every`` batches
+    fsyncs (``lag()`` reports records flushed but not yet fsynced);
+    ``segment_records`` caps records per segment before rotation.
+    """
+
+    def __init__(self, path: str, spec=None, *, source: str = "plane",
+                 fsync_every: int = 8, segment_records: int = 4096):
+        if fsync_every < 1:
+            raise ValueError("fsync_every must be >= 1")
+        if segment_records < 1:
+            raise ValueError("segment_records must be >= 1")
+        self.path = path
+        self.source = source
+        self.fsync_every = int(fsync_every)
+        self.segment_records = int(segment_records)
+        self.counts: dict = {}          # kind -> appended (this + prior lives)
+        self._seen: set = set()         # dedup keys across all segments
+        self._lock = threading.Lock()
+        self._f = None
+        self._seq = 0                   # next seq to assign
+        self._seg = 0                   # current segment index
+        self._seg_n = 0                 # records in the current segment
+        self._unsynced = 0
+        os.makedirs(path, exist_ok=True)
+        segs = _segment_paths(path)
+        header = None
+        for i, seg in enumerate(segs):
+            h, recs = _read_segment(seg, last=(i == len(segs) - 1))
+            if h is not None and header is None:
+                header = h
+            for r in recs:
+                key = r.dedup_key()
+                if key is not None:
+                    self._seen.add(key)
+                self.counts[r.kind] = self.counts.get(r.kind, 0) + 1
+                if r.seq is not None:
+                    self._seq = max(self._seq, r.seq + 1)
+            if i == len(segs) - 1:
+                self._seg, self._seg_n = i, len(recs)
+        if spec is None and header is not None and "spec" in header:
+            from repro.serving.service import ServeSpec
+            spec = ServeSpec.from_dict(header["spec"])
+        self.spec = spec
+        if segs:
+            # a crash can leave a torn final line on the last segment;
+            # records are line-framed, so drop it before appending
+            with open(segs[-1], "r+") as f:
+                data = f.read()
+                if data and not data.endswith("\n"):
+                    f.seek(data.rfind("\n") + 1)
+                    f.truncate()
+            self._f = open(segs[-1], "a")
+        else:
+            self._open_segment(0)
+
+    # -- segments ------------------------------------------------------
+    def _header(self, seg: int) -> dict:
+        h = dict(type="header", version=RECORD_VERSION, segment=seg,
+                 source=self.source)
+        if self.spec is not None:
+            h["spec"] = self.spec.to_dict()
+        return h
+
+    def _open_segment(self, seg: int) -> None:
+        if self._f is not None:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._f.close()
+            self._unsynced = 0
+        self._seg, self._seg_n = seg, 0
+        self._f = open(os.path.join(self.path, _SEGMENT_FMT.format(seg)), "w")
+        self._f.write(json.dumps(self._header(seg)) + "\n")
+        self._f.flush()
+
+    # -- append --------------------------------------------------------
+    def append(self, kind: str, *, offset: float, sample: int = 0,
+               client: int = 0, slo: Optional[str] = None,
+               rel_deadline: Optional[float] = None,
+               tenant: Optional[str] = None,
+               request_id: Optional[str] = None,
+               outcome: Optional[dict] = None,
+               sync: bool = False) -> Optional[Record]:
+        """Durably append one record; returns it, or ``None`` when an
+        identical ``(kind, request_id)`` record already exists (the
+        idempotence that makes recovery re-runnable)."""
+        with self._lock:
+            rec = Record(offset=float(offset), sample=int(sample),
+                         client=int(client), slo=slo,
+                         rel_deadline=rel_deadline, outcome=outcome,
+                         kind=kind, tenant=tenant, request_id=request_id,
+                         seq=self._seq)
+            key = rec.dedup_key()
+            if key is not None and key in self._seen:
+                return None
+            if self._seg_n >= self.segment_records:
+                self._open_segment(self._seg + 1)
+            self._f.write(rec.to_json() + "\n")
+            self._f.flush()
+            self._seq += 1
+            self._seg_n += 1
+            self._unsynced += 1
+            if key is not None:
+                self._seen.add(key)
+            self.counts[kind] = self.counts.get(kind, 0) + 1
+            if sync or self._unsynced >= self.fsync_every:
+                os.fsync(self._f.fileno())
+                self._unsynced = 0
+            return rec
+
+    def sync(self) -> None:
+        with self._lock:
+            if self._f is not None and self._unsynced:
+                os.fsync(self._f.fileno())
+                self._unsynced = 0
+
+    def lag(self) -> int:
+        """Records written but not yet fsynced (the journal's durability
+        lag under batched fsyncs)."""
+        return self._unsynced
+
+    @property
+    def next_seq(self) -> int:
+        return self._seq
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.flush()
+                os.fsync(self._f.fileno())
+                self._f.close()
+                self._f = None
+                self._unsynced = 0
+
+    def __enter__(self) -> "Journal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class JournalObserver:
+    """The ``observer`` resource that wires a :class:`Journal` into the
+    ``Service`` lifecycle: ADMIT when the task factory claims a request,
+    STAGE per in-time anytime exit, RETIRE/REJECT (fsynced) *before* the
+    response handle resolves — so an outcome a caller has seen is always
+    on disk.  Requests without a ``request_id`` are not journaled (they
+    were never durably submitted)."""
+
+    def __init__(self, journal: Journal):
+        self.journal = journal
+        self._rids: dict = {}          # tid -> (tenant, request_id)
+
+    def on_admit(self, task, request, now: float) -> None:
+        rid = getattr(request, "request_id", None)
+        if rid is None:
+            return
+        tenant = getattr(request, "tenant", None)
+        self._rids[task.tid] = (tenant, rid)
+        self.journal.append("ADMIT", offset=now, sample=task.sample,
+                            client=task.client, tenant=tenant,
+                            request_id=rid)
+
+    def on_stage(self, task, now: float) -> None:
+        ent = self._rids.get(task.tid)
+        if ent is None:
+            return
+        self.journal.append("STAGE", offset=now, sample=task.sample,
+                            client=task.client, tenant=ent[0],
+                            request_id=ent[1],
+                            outcome={"depth": task.executed})
+
+    def on_retire(self, rec: dict, now: float) -> None:
+        rid = rec.get("request_id")
+        if rid is None:
+            return
+        self._rids.pop(rec["tid"], None)
+        outcome = {k: rec[k] for k in ("depth", "missed", "rejected",
+                                       "latency", "deadline", "conf",
+                                       "weight", "depth_cap")
+                   if rec.get(k) is not None}
+        self.journal.append(
+            "REJECT" if rec["rejected"] else "RETIRE", offset=now,
+            sample=rec["sample"], client=rec["client"], slo=rec["slo"],
+            rel_deadline=rec.get("rel_deadline"), tenant=rec.get("tenant"),
+            request_id=rid, outcome=outcome, sync=True)

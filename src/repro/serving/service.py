@@ -157,6 +157,11 @@ class ServeSpec:
     # callback resource every `metrics_interval` service seconds
     # (repro.serving.traffic.control)
     metrics_interval: float = 0.0
+    # tenant -> {"weight": w, "rate": r, "burst": b}: multi-tenant front
+    # door (repro.serving.plane.frontdoor).  ``weight`` scales both the
+    # fair-queueing quantum and the task's utility weight; ``rate``/
+    # ``burst`` define the tenant's token-bucket submission quota.
+    tenants: dict = dataclasses.field(default_factory=dict)
 
     # -- round trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -213,6 +218,26 @@ class ServeSpec:
             if ov is not None and ov not in _OVERFLOW_MODES:
                 raise ValueError(f"live source overflow {ov!r} not in "
                                  f"{_OVERFLOW_MODES}")
+        for name, cfg in self.tenants.items():
+            if not isinstance(cfg, dict):
+                raise ValueError(f"tenant {name!r}: config must be a dict")
+            if float(cfg.get("weight", 1.0)) <= 0:
+                raise ValueError(f"tenant {name!r}: weight must be > 0")
+            rate = cfg.get("rate")
+            if rate is not None and float(rate) <= 0:
+                raise ValueError(f"tenant {name!r}: rate must be > 0")
+            if float(cfg.get("burst", 1.0)) < 1:
+                raise ValueError(f"tenant {name!r}: burst must be >= 1")
+        if self.source == "frontdoor":
+            disc = self.source_args.get("discipline")
+            if disc is not None and disc not in ("drr", "fifo"):
+                raise ValueError(f"frontdoor discipline {disc!r} not in "
+                                 "('drr', 'fifo')")
+            rq = self.source_args.get("run_queue")
+            if rq is not None and int(rq) < 1:
+                raise ValueError("frontdoor 'run_queue' must be >= 1")
+            if float(self.source_args.get("quantum", 1.0)) <= 0:
+                raise ValueError("frontdoor 'quantum' must be > 0")
         return self
 
     def _validate_sharded_args(self) -> None:
@@ -299,6 +324,7 @@ class ServiceMetrics(SimResult):
     overload-control question is whether *admitted* work meets its
     deadlines while rejects fail fast."""
     per_class: dict = dataclasses.field(default_factory=dict)
+    per_tenant: dict = dataclasses.field(default_factory=dict)
     rejected: int = 0
     capped: int = 0
     cancelled: int = 0
@@ -505,6 +531,9 @@ class ServiceRecorder:
         self.inner = inner
         self.executor = executor
         self.streamer = streamer       # MetricsStreamer (traffic.control)
+        # durable-plane hook (repro.serving.plane.JournalObserver): its
+        # terminal append must land, fsynced, before the handle resolves
+        self.observer = service.resources.get("observer")
         self.records: list = []
         self.core = None               # set by Service._build
 
@@ -522,6 +551,8 @@ class ServiceRecorder:
     def on_stage(self, task, now: float) -> None:
         if self.streamer is not None:
             self.streamer.tick(now)
+        if self.observer is not None:
+            self.observer.on_stage(task, now)
         h = self.service._handles.get(task.tid)
         if h is None:
             return
@@ -540,14 +571,19 @@ class ServiceRecorder:
         # already the true arrival
         t0 = self.service._req_arrivals.pop(task.tid, task.arrival)
         latency = now - t0
+        tenant, rid = self.service._req_meta.pop(task.tid, (None, None))
         rec = dict(
             tid=task.tid, sample=task.sample, client=task.client, slo=slo,
             depth=task.executed, missed=missed, conf=conf, prediction=pred,
             arrival=task.arrival, deadline=task.deadline, offset=t0,
             rel_deadline=self.service._req_rels.pop(task.tid, None),
-            depth_cap=task.depth_cap,
+            depth_cap=task.depth_cap, tenant=tenant, request_id=rid,
             latency=latency, rejected=rejected, weight=task.weight)
         self.records.append(rec)
+        if self.observer is not None:
+            # the WAL's terminal record, fsynced before _resolve below —
+            # an outcome a caller has seen is always on disk
+            self.observer.on_retire(rec, now)
         if self.streamer is not None:
             self.streamer.observe(rec, now)
         self.service._slo_names.pop(task.tid, None)
@@ -626,6 +662,32 @@ class ServiceRecorder:
                 n=0, miss_rate=0.0, rejected=0, mean_depth=0.0,
                 mean_latency=0.0))
             entry["rejected"] += cnt
+        per_tenant: dict = {}
+        for r in self.records:
+            if r.get("tenant") is None:
+                continue
+            t = per_tenant.setdefault(r["tenant"], dict(
+                n=0, served=0, missed=0, rejected=0, depth_sum=0,
+                latency_sum=0.0))
+            t["n"] += 1
+            t["missed"] += int(r["missed"])
+            t["rejected"] += int(r["rejected"])
+            t["served"] += int(not r["rejected"] and not r["missed"])
+            t["depth_sum"] += r["depth"]
+            t["latency_sum"] += r["latency"]
+        for name, t in per_tenant.items():
+            n = t["n"]
+            per_tenant[name] = dict(
+                n=n, served=t["served"], rejected=t["rejected"],
+                miss_rate=t["missed"] / n, mean_depth=t["depth_sum"] / n,
+                mean_latency=t["latency_sum"] / n)
+        # front-door quota rejects never became tasks: count them per
+        # tenant the same way backpressure rejects count per class
+        for name, cnt in self.service._tenant_rejects.items():
+            entry = per_tenant.setdefault(name, dict(
+                n=0, served=0, rejected=0, miss_rate=0.0, mean_depth=0.0,
+                mean_latency=0.0))
+            entry["rejected"] += cnt
         adm_recs = [r for r in self.records if not r["rejected"]]
         admitted_miss = (sum(r["missed"] for r in adm_recs) / len(adm_recs)
                          if adm_recs else 0.0)
@@ -645,6 +707,7 @@ class ServiceRecorder:
         spec = self.service.spec
         return ServiceMetrics(
             **self._base_fields(core), per_class=per_class,
+            per_tenant=per_tenant,
             rejected=(adm.rejected if adm is not None else 0)
             + self.service._n_bp_rejected,
             capped=(adm.capped if adm is not None else 0)
@@ -715,6 +778,8 @@ class Service:
         self._n_bp_rejected = 0         # backpressure: rejected at submit()
         self._n_shed = 0                # backpressure: depth shed at submit()
         self._bp_per_class: dict = {}   # slo name -> backpressure rejects
+        self._req_meta: dict = {}       # tid -> (tenant, request_id)
+        self._tenant_rejects: dict = {}  # tenant -> front-door quota rejects
         self._closed = False
         self._live: Optional[_Built] = None
         self._live_error: Optional[BaseException] = None
@@ -852,6 +917,7 @@ class Service:
         cfg = self.resources.get("cfg")
         mandatory = cfg.mandatory_stages if cfg is not None \
             else int(spec.source_args.get("mandatory_stages", 1))
+        observer = self.resources.get("observer")  # durable-plane journal
 
         def factory(request, now):
             handle = getattr(request, "_handle", None)
@@ -879,6 +945,16 @@ class Service:
                 if slo.depth_cap is not None:
                     task.depth_cap = max(task.mandatory, slo.depth_cap)
                 self._slo_names[task.tid] = slo.name
+            tenant = getattr(request, "tenant", None)
+            rid = getattr(request, "request_id", None)
+            if tenant is not None or rid is not None:
+                self._req_meta[task.tid] = (tenant, rid)
+            if tenant is not None:
+                # tenant priority composes multiplicatively with the SLO
+                # class weight, so the FPTAS utility objective sees it
+                tw = float(spec.tenants.get(tenant, {}).get("weight", 1.0))
+                if tw != 1.0:
+                    task.weight = task.weight * tw
             if getattr(request, "_shed", False):
                 # backpressure shed-optional: admitted, but only the
                 # mandatory part survives (traffic.control semantics)
@@ -893,6 +969,8 @@ class Service:
             if handle is not None:
                 self._handles[task.tid] = handle
                 handle._task = task
+            if observer is not None:
+                observer.on_admit(task, request, now)
             return task
         return factory
 
@@ -946,11 +1024,27 @@ class Service:
             for h in list(self._submitted):   # snapshot: cancel() mutates
                 h._fail(exc)
 
+    def _source_is_live(self) -> bool:
+        """Whether this spec's source accepts submissions: ``"live"``, a
+        source *resource*, registered factory, or source class carrying a
+        truthy ``live`` attribute (e.g. the durable plane's front door)."""
+        if self.spec.source == "live":
+            return True
+        inst = self.resources.get("source")
+        target = inst if inst is not None \
+            else resolve("source", self.spec.source)
+        return bool(getattr(target, "live", False))
+
     def submit(self, request, slo: Optional[str] = None,
-               at: Optional[float] = None) -> ResponseHandle:
-        """Admit one request (``source="live"``).  ``slo`` picks the SLO
-        class (``spec.default_slo`` otherwise); ``at`` is the virtual
-        arrival offset for discrete-event services (defaults to 0).
+               at: Optional[float] = None, *,
+               tenant: Optional[str] = None,
+               request_id: Optional[str] = None) -> ResponseHandle:
+        """Admit one request (``source="live"`` or any live-capable
+        source, e.g. ``"frontdoor"``).  ``slo`` picks the SLO class
+        (``spec.default_slo`` otherwise); ``at`` is the virtual arrival
+        offset for discrete-event services (defaults to 0); ``tenant`` /
+        ``request_id`` label the request for the durable plane
+        (``repro.serving.plane``).
 
         With a bounded intake (``source_args={"bound": N, "overflow":
         ...}``; see ``repro.serving.traffic.control``), an over-bound
@@ -959,9 +1053,18 @@ class Service:
         shed (``"shed-optional"``)."""
         if self._closed:
             raise RuntimeError("service is closed")
-        if self.spec.source != "live":
-            raise RuntimeError("submit() needs spec.source='live' "
-                               f"(got {self.spec.source!r})")
+        if not self._source_is_live():
+            raise RuntimeError("submit() needs a live-capable source "
+                               "(spec.source='live'/'frontdoor', or a "
+                               "source with live=True; got "
+                               f"{self.spec.source!r})")
+        if self._live_error is not None:
+            raise RuntimeError("serving engine failed while live") \
+                from self._live_error
+        if tenant is not None:
+            request.tenant = tenant
+        if request_id is not None:
+            request.request_id = request_id
         # fail fast on what the engine thread would otherwise die on:
         # unknown class names, and no deadline from any source
         cls = self.spec.slo_class(slo if slo is not None
@@ -1023,23 +1126,37 @@ class Service:
         return self._live_realtime
 
     def drain(self) -> ServiceMetrics:
-        """Stop intake, finish everything in flight, return final metrics."""
-        if self._live is not None:
-            self._live.source.close()
+        """Stop intake, finish everything in flight, return final metrics.
+
+        Idempotent and exception-safe: the live build is detached
+        *before* anything can raise, so an engine failure surfaces here
+        exactly once (outstanding handles were already resolved with the
+        same error by the fanout) and a second ``drain()``/``close()``
+        returns instead of raising again or hanging on a dead engine."""
+        live, self._live = self._live, None
+        if live is not None:
+            live.source.close()
             if self._thread is not None:
                 self._thread.join()
                 self._thread = None
-            if self._live_error is not None:
+            err, self._live_error = self._live_error, None
+            if err is not None:
                 raise RuntimeError("serving engine failed while live") \
-                    from self._live_error
-            self._finish_streamer(self._live)
-            self._last = self._live.recorder.result(self._live.core)
-            self._live = None
+                    from err
+            self._finish_streamer(live)
+            self._last = live.recorder.result(live.core)
             return self._last
         if self._buffer:
             buf, self._buffer = self._buffer, []
             built = self._build(sorted(buf, key=lambda p: p[0]))
-            built.core.run()
+            try:
+                built.core.run()
+            except BaseException as exc:
+                # same contract as the wall-clock path: no waiter is left
+                # stranded on a handle whose engine died
+                for h in list(self._submitted):
+                    h._fail(exc)
+                raise
             self._finish_streamer(built)
             self._last = built.recorder.result(built.core)
             return self._last
@@ -1052,11 +1169,21 @@ class Service:
             self.snapshots = list(streamer.snapshots)
 
     def close(self) -> None:
-        """Graceful shutdown: drain, then refuse further work."""
+        """Graceful shutdown: drain, then refuse further work.
+
+        Idempotent, and exception-safe against a failed engine: the
+        failure already reached every outstanding handle (``result()``
+        raises it), so close() completes the shutdown instead of
+        re-raising — callers that want the error call ``drain()``."""
         if self._closed:
             return
-        self.drain()
         self._closed = True
+        try:
+            self.drain()
+        except Exception:
+            # the engine error was fanned out to the handles; shutdown
+            # itself must still finish (context-manager exit paths)
+            pass
 
     def __enter__(self) -> "Service":
         return self

@@ -50,6 +50,12 @@ class ServiceSnapshot:
     utilization: float          # device-busy fraction of the window
     rejected: int               # admission + backpressure rejects
     capped: int                 # depth-capped (incl. shed-optional)
+    # pending-but-not-admitted intake: source queue + the facade's
+    # virtual-clock submit buffer (uniform across sources)
+    intake_depth: int = 0
+    # tenant -> {"queued": source backlog, "n": retired this window}
+    # (multi-tenant front door, repro.serving.plane)
+    per_tenant: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -126,14 +132,28 @@ class MetricsStreamer:
             if self.core is not None else 0.0
         span = max(now - self._last_t, 1e-12)
         rejected, capped = self._counts()
+        qsize = self.source.qsize() if self.source is not None else 0
+        intake = qsize
+        if self.service is not None:
+            intake += len(self.service._buffer)
+        per_tenant: dict = {}
+        if self.source is not None and hasattr(self.source, "tenant_depths"):
+            for t, d in self.source.tenant_depths().items():
+                per_tenant[t] = dict(queued=d, n=0)
+        for r in w:
+            if r.get("tenant") is not None:
+                entry = per_tenant.setdefault(r["tenant"],
+                                              dict(queued=0, n=0))
+                entry["n"] += 1
         snap = ServiceSnapshot(
             t=now, n=n, miss_rate=(missed / n) if n else 0.0, accuracy=acc,
             mean_depth=(sum(r["depth"] for r in ok) / len(ok)) if ok else 0.0,
-            queue_depth=self.source.qsize() if self.source is not None else 0,
+            queue_depth=qsize,
             active=len(self.core._active) if self.core is not None else 0,
             utilization=min(1.0, (busy - self._last_busy) / span),
             rejected=rejected - self._last_rejected,
-            capped=capped - self._last_capped)
+            capped=capped - self._last_capped,
+            intake_depth=intake, per_tenant=per_tenant)
         self.snapshots.append(snap)
         if self.callback is not None:
             self.callback(snap)

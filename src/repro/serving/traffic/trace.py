@@ -22,61 +22,41 @@ Scope: bit-for-bit holds for factory-built sources (``traffic`` /
 deadlines (the legacy source applies no adjustment), which is useful for
 load shape but not bit-exact.
 
-JSONL schema (see README "Traffic" section)::
+Schema: a trace line is a
+:class:`~repro.serving.plane.records.Record` (the codec shared with the
+durable plane's write-ahead journal) with the default ``EVENT`` kind::
 
-    {"type": "header", "version": 1, "n_events": N,
+    {"type": "header", "version": 2, "n_events": N,
      "source": "...", "spec": {...}?}            # spec: optional ServeSpec
     {"offset": 0.0123, "sample": 42, "client": 0, "slo": "gold",
      "rel_deadline": 0.2,
      "outcome": {"depth": 2, "missed": false, "rejected": false,
                  "latency": 0.017, "deadline": 0.2023, "conf": 0.91,
                  "weight": 2.0}}
+
+Version history: 1 — the same event lines, before the schema was unified
+with the journal (no ``kind``/``tenant``/``request_id`` fields).
+Version-1 traces load unchanged (``EVENT`` is the default kind), and
+``EVENT`` rows without plane fields still serialize byte-identically to
+version 1.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
-from typing import Optional
 
-from repro.serving.engine import Request
+from repro.serving.engine import Request  # noqa: F401 — legacy re-export
+from repro.serving.plane.records import RECORD_VERSION, Record
 from repro.serving.registry import register_source
 from repro.serving.runtime.sources import StreamSource
 
-TRACE_VERSION = 1
+TRACE_VERSION = RECORD_VERSION
 
 _OUTCOME_KEYS = ("depth", "missed", "rejected", "latency", "deadline",
                  "conf", "weight", "depth_cap")
 
-
-@dataclasses.dataclass(frozen=True)
-class TraceEvent:
-    """One recorded request: when/what arrived, and what happened to it."""
-
-    offset: float
-    sample: int = 0
-    client: int = 0
-    slo: Optional[str] = None
-    rel_deadline: Optional[float] = None
-    outcome: Optional[dict] = None
-
-    def to_json(self) -> str:
-        d = dict(offset=self.offset, sample=self.sample, client=self.client,
-                 slo=self.slo, rel_deadline=self.rel_deadline)
-        if self.outcome is not None:
-            d["outcome"] = self.outcome
-        return json.dumps(d)
-
-    @classmethod
-    def from_dict(cls, d: dict) -> "TraceEvent":
-        return cls(offset=float(d["offset"]), sample=int(d.get("sample", 0)),
-                   client=int(d.get("client", 0)), slo=d.get("slo"),
-                   rel_deadline=d.get("rel_deadline"),
-                   outcome=d.get("outcome"))
-
-    def request(self) -> Request:
-        return Request(inputs=None, rel_deadline=self.rel_deadline,
-                       sample=self.sample, client=self.client,
-                       arrival=self.offset, slo=self.slo)
+#: one schema for traces and the journal (repro.serving.plane.records):
+#: a trace event is a Record of the default ``EVENT`` kind
+TraceEvent = Record
 
 
 class TraceRecorder:
@@ -104,7 +84,8 @@ class TraceRecorder:
             self.events.append(TraceEvent(
                 offset=offset, sample=int(r["sample"]),
                 client=int(r.get("client", 0)), slo=r.get("slo"),
-                rel_deadline=float(rel), outcome=outcome))
+                rel_deadline=float(rel), outcome=outcome,
+                tenant=r.get("tenant"), request_id=r.get("request_id")))
         return self.events
 
     def header(self) -> dict:
@@ -132,7 +113,8 @@ def record_trace(metrics, path: str, *, source: str = "unknown",
 
 
 def load_trace(path: str) -> tuple:
-    """Parse a JSONL trace -> (header dict, [TraceEvent])."""
+    """Parse a JSONL trace -> (header dict, [TraceEvent]).  Reads both
+    version-1 (pre-unification) and version-2 files."""
     header, events = {}, []
     with open(path) as f:
         for line in f:
@@ -144,6 +126,10 @@ def load_trace(path: str) -> tuple:
                 header = d
             else:
                 events.append(TraceEvent.from_dict(d))
+    v = header.get("version")
+    if v is not None and int(v) > TRACE_VERSION:
+        raise ValueError(f"trace {path!r} is version {v}; this reader "
+                         f"handles <= {TRACE_VERSION}")
     n = header.get("n_events")
     if n is not None and n != len(events):
         raise ValueError(f"trace {path!r} declares {n} events, "

@@ -1,0 +1,95 @@
+"""planectl: offline health/stats over a durable-plane journal.
+
+The journal directory (``repro.serving.plane.Journal``) is the request
+plane's source of truth, so this CLI needs no live process — it answers
+the operator questions from the segments alone:
+
+    PYTHONPATH=src python tools/planectl.py stats <journal_dir>
+    PYTHONPATH=src python tools/planectl.py stats <journal_dir> --json
+    PYTHONPATH=src python tools/planectl.py pending <journal_dir>
+    PYTHONPATH=src python tools/planectl.py tail <journal_dir> [-n 10]
+
+``stats`` — queue depth (durably submitted, not yet terminal),
+per-tenant admit/retire/reject counts, journal shape (segments, records,
+last seq).  ``pending`` — the request_ids :func:`recover` would redo.
+``tail`` — the last N records, one JSON line each.
+
+A live process answers the same questions (plus in-memory queue state)
+via ``FrontDoor.stats()``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.serving.plane.health import journal_stats          # noqa: E402
+from repro.serving.plane.journal import scan_journal          # noqa: E402
+
+
+def _cmd_stats(args) -> int:
+    st = journal_stats(args.journal)
+    if args.json:
+        print(json.dumps(st, indent=2, sort_keys=True))
+        return 0
+    print(f"journal     {st['path']}")
+    print(f"version     {st['version']}  source={st['source']}  "
+          f"spec={'yes' if st['has_spec'] else 'no'}")
+    print(f"segments    {st['segments']}  records={st['records']}  "
+          f"last_seq={st['last_seq']}")
+    print("counts      " + "  ".join(
+        f"{k}={v}" for k, v in sorted(st["counts"].items())))
+    print(f"queue_depth {st['queue_depth']}")
+    for tenant, c in sorted(st["per_tenant"].items()):
+        print(f"  tenant {tenant:<12} submitted={c['submitted']} "
+              f"admitted={c['admitted']} staged={c['staged']} "
+              f"retired={c['retired']} rejected={c['rejected']} "
+              f"pending={c['pending']}")
+    return 0
+
+
+def _cmd_pending(args) -> int:
+    st = journal_stats(args.journal)
+    for rid in st["pending"]:
+        print(rid)
+    return 0 if not st["pending"] else 1
+
+
+def _cmd_tail(args) -> int:
+    _, records = scan_journal(args.journal)
+    for rec in records[-args.n:]:
+        print(rec.to_json())
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="planectl", description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("stats", help="queue depth + per-tenant counters")
+    sp.add_argument("journal", help="journal directory")
+    sp.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    sp.set_defaults(fn=_cmd_stats)
+
+    sp = sub.add_parser("pending",
+                        help="request_ids submitted but not terminal "
+                             "(exit 1 when any)")
+    sp.add_argument("journal")
+    sp.set_defaults(fn=_cmd_pending)
+
+    sp = sub.add_parser("tail", help="last N journal records as JSON lines")
+    sp.add_argument("journal")
+    sp.add_argument("-n", type=int, default=10)
+    sp.set_defaults(fn=_cmd_tail)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
