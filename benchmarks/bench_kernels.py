@@ -2,16 +2,34 @@
 plus the analytic VMEM working set per BlockSpec tile — the quantity that
 determines whether a tile choice fits v5e VMEM (128 MiB/core budget split
 across buffers).  Prints name,us_per_call,derived CSV.
+
+``--smoke`` runs every kernel once at reduced shapes (single timing rep) —
+the CI bench-smoke leg that keeps all five kernel dispatch paths alive
+without the full-shape interpret-mode cost.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
+#: --smoke shrinks the dominant shape axes and times a single rep; full
+#: runs keep the VMEM-analysis shapes
+SMOKE = False
 
-def _time(fn, *args, n=3):
+
+def _shape(full, small):
+    return small if SMOKE else full
+
+
+def _reps():
+    return 1 if SMOKE else 3
+
+
+def _time(fn, *args, n=None):
+    n = n or _reps()
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
@@ -22,7 +40,7 @@ def _time(fn, *args, n=3):
 
 def bench_flash_attention():
     from repro.kernels.flash_attention import flash_attention_op
-    B, H, KV, S, dh = 1, 4, 2, 256, 64
+    B, H, KV, S, dh = 1, 4, 2, _shape(256, 64), 64
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (B, H, S, dh))
     k = jax.random.normal(ks[1], (B, KV, S, dh))
@@ -35,7 +53,7 @@ def bench_flash_attention():
 
 def bench_decode_attention():
     from repro.kernels.decode_attention import decode_attention_op
-    B, H, KV, S, dh = 4, 8, 2, 1024, 64
+    B, H, KV, S, dh = 4, 8, 2, _shape(1024, 128), 64
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     q = jax.random.normal(ks[0], (B, H, dh))
     kc = jax.random.normal(ks[1], (B, KV, S, dh))
@@ -49,7 +67,7 @@ def bench_decode_attention():
 
 def bench_exit_confidence():
     from repro.kernels.exit_confidence import exit_confidence_op
-    N, d, V = 8, 256, 32768
+    N, d, V = 8, 256, _shape(32768, 2048)
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     h = jax.random.normal(ks[0], (N, d))
     sc = 0.1 * jax.random.normal(ks[1], (d,))
@@ -62,7 +80,7 @@ def bench_exit_confidence():
 
 def bench_rmsnorm():
     from repro.kernels.rmsnorm import rmsnorm_op
-    x = jax.random.normal(jax.random.PRNGKey(3), (1024, 512))
+    x = jax.random.normal(jax.random.PRNGKey(3), (_shape(1024, 128), 512))
     s = 0.1 * jax.random.normal(jax.random.PRNGKey(4), (512,))
     us = _time(lambda *a: rmsnorm_op(*a, block_rows=256), x, s)
     print(f"rmsnorm,{us:.0f},vmem_tile_bytes={256 * 512 * 4}")
@@ -71,7 +89,7 @@ def bench_rmsnorm():
 def bench_mlstm_chunk():
     from repro.kernels.mlstm_chunk import mlstm_chunk_op
     import jax.numpy as jnp
-    B, H, L, dh = 2, 4, 128, 64
+    B, H, L, dh = 2, 4, _shape(128, 32), 64
     ks = jax.random.split(jax.random.PRNGKey(5), 5)
     q = jax.random.normal(ks[0], (B, H, L, dh))
     k = jax.random.normal(ks[1], (B, H, L, dh))
@@ -86,7 +104,12 @@ def bench_mlstm_chunk():
     print(f"mlstm_chunk,{us:.0f},vmem_tile_bytes={vmem}")
 
 
-def main():
+def main(argv=None):
+    global SMOKE
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes, one timing rep (CI)")
+    SMOKE = ap.parse_args(argv).smoke
     bench_flash_attention()
     bench_decode_attention()
     bench_exit_confidence()

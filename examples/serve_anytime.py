@@ -11,7 +11,9 @@ Every engine is built through the public serving API: a declarative
 (``device-single`` = unbatched per-stage dispatch, ``device-batched`` =
 continuous micro-batching, ``pipeline_depth=2`` = pipelined async
 dispatch, ``device-sharded`` = the batched engine across a ``(dp, tp)``
-mesh with a 1x1 fallback on single-device hosts), and
+mesh with a 1x1 fallback on single-device hosts, ``device-kernel`` with
+``--kernels`` = Pallas stage bodies with the fused exit-confidence
+epilogue at ``pipeline_depth=3``), and
 ``repro.serving.Service`` owns the engine lifecycle; the model params /
 stage fns / profiled time model ride along as resources.
 
@@ -62,6 +64,10 @@ def main(argv=None):
                     help="data-parallel ways for the device-sharded engine "
                          "(falls back to a 1x1 mesh when the host has "
                          "fewer devices)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also run the kernel-backed fast path (executor "
+                         "'device-kernel': Pallas stage bodies, fused "
+                         "exit-confidence, pipeline_depth=3)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload, few profiling runs, no artifact "
                          "writes (CI job)")
@@ -133,21 +139,22 @@ def main(argv=None):
                 ("edf", {})]
 
     def spec_for(policy, policy_args, *, batched, pipelined=False,
-                 sharded=False):
+                 sharded=False, kernel=False):
         if batched:
             batching = {}            # priced by the profiled time_model
         else:
             batching = {"mode": "none",
                         "stage_times": [float(x) for x in wcet]}
-        executor = "device-sharded" if sharded else \
-            ("device-batched" if batched else "device-single")
+        executor = "device-kernel" if kernel else \
+            ("device-sharded" if sharded else
+             ("device-batched" if batched else "device-single"))
         return ServeSpec(
             policy=policy, policy_args=policy_args,
             executor=executor,
             executor_args={"dp": args.dp, "tp": 1} if sharded else {},
             clock="wall", source="stream", batching=batching,
             host_overhead=host_overhead,
-            pipeline_depth=2 if pipelined else 1)
+            pipeline_depth=3 if kernel else (2 if pipelined else 1))
 
     results = {}
     for name, pargs in POLICIES:
@@ -183,6 +190,26 @@ def main(argv=None):
     results[f"sharded-{name}"] = report(
         f"sharded{ex.dp}x{ex.tp}-{name}", svc)
     assert ex.cache_stats()["live"] == 0      # state evicted on retire
+    # kernel-backed fast path (executor "device-kernel", also registered
+    # by repro.launch.serve): jitted Pallas stage bodies with the fused
+    # exit-confidence epilogue, dispatching pipeline_depth-1 = 2 stacked
+    # device windows
+    if args.kernels:
+        name, pargs = POLICIES[0]
+        svc = Service.from_spec(spec_for(name, pargs, batched=True,
+                                         kernel=True),
+                                cfg=cfg, params=params,
+                                time_model=time_model)
+        svc.run(stream())
+        results[f"kernel-{name}"] = report(f"kernel-{name}", svc)
+        kx = svc.executor
+        kt = kx.device_time_stats()
+        print(f"kernel telemetry: host={kt['host_time']:.3f}s "
+              f"device={kt['device_time']:.3f}s "
+              f"windows={kx.max_inflight} "
+              f"cache={kx.cache_stats()}")
+        assert kx.max_inflight == 2
+        assert kx.cache_stats()["live"] == 0
     if args.smoke:
         assert all(len(r) == 3 for r in results.values())
         print(f"SMOKE OK: {len(results)} engine configs served "

@@ -25,6 +25,7 @@ class Task:
     sample: int = 0                  # dataset index (payload reference)
     client: int = 0
     tid: int = dataclasses.field(default_factory=lambda: next(_ids))
+    seq_len: Optional[int] = None    # ragged input length (length-bucket WCETs)
 
     # runtime state ---------------------------------------------------------
     executed: int = 0                # stages completed so far

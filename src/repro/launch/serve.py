@@ -23,7 +23,11 @@ the registry's extension points (no core module touched):
 * executor ``device-sharded`` (:mod:`repro.launch.sharded`) — the batched
   classifier engine with its stage fns sharded over a ``(dp, tp)`` mesh
   from :func:`repro.launch.mesh.make_serving_mesh`; falls back to a 1x1
-  mesh on single-device hosts so the same ServeSpec runs everywhere.
+  mesh on single-device hosts so the same ServeSpec runs everywhere;
+* executor ``device-kernel`` (:mod:`repro.launch.kernel`) — Pallas-backed
+  stage fns: fused exit-confidence epilogue (no logits round-trip) and
+  ragged decode batching over per-request KV caches through the decode
+  kernel, with ``(stage, batch-bucket, len-bucket)`` WCET pricing.
 
 ``--dry-run`` validates the spec against the registry and prints it as
 JSON without touching the model (the CI examples-smoke job).
@@ -169,6 +173,20 @@ def _make_device_sharded(args, ctx):
     ``stage_fns`` / ``mesh``."""
     from repro.launch.sharded import build_sharded_executor
     return build_sharded_executor(args, ctx)
+
+
+@register_executor("device-kernel")
+def _make_device_kernel(args, ctx):
+    """``device-batched`` with Pallas-kernel stage bodies: fused
+    exit-confidence epilogue (``mode="classifier"``) or ragged decode
+    batching over the per-request KV caches (``mode="decode"``), with
+    optional ``(stage, batch-bucket, len-bucket)`` WCET refinement.  args:
+    ``{"mode": ..., "interpret": ..., "block_rows": ..., "block_v": ...,
+    "len_buckets": [...], "len_marginal": ...}`` (see :func:`repro.launch.
+    kernel.build_kernel_executor`); resources: ``cfg``, ``params``,
+    optionally ``stage_fns`` / ``mesh``."""
+    from repro.launch.kernel import build_kernel_executor
+    return build_kernel_executor(args, ctx)
 
 
 class TokenLoopSource:

@@ -1,17 +1,24 @@
 from repro.models.common import ParallelCtx
+from repro.models.exits import exit_rows, exit_stats_fused, exit_stats_unfused
 from repro.models.model import (
     ExitsOut,
+    concat_decode_caches,
     count_params_analytic,
     decode_step,
     forward,
     init_decode_cache,
     init_params,
+    slice_decode_cache,
+    stage_decode_step,
     stage_forward,
     stage_layouts,
+    stage_trunk,
 )
 
 __all__ = [
-    "ParallelCtx", "ExitsOut", "count_params_analytic", "decode_step",
-    "forward", "init_decode_cache", "init_params", "stage_forward",
-    "stage_layouts",
+    "ParallelCtx", "ExitsOut", "concat_decode_caches",
+    "count_params_analytic", "decode_step",
+    "exit_rows", "exit_stats_fused", "exit_stats_unfused",
+    "forward", "init_decode_cache", "init_params", "slice_decode_cache",
+    "stage_decode_step", "stage_forward", "stage_layouts", "stage_trunk",
 ]

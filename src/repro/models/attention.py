@@ -254,7 +254,17 @@ def apply_gqa_step(cfg, params, x, *, cache, cur_pos, local: bool, ctx):
 
     window = cfg.sliding_window if local else None
     scale = hd ** -0.5
-    if ctx is not None and ctx.decode_attn == "flash_decode":
+    if ctx is not None and ctx.decode_attn == "kernel":
+        # Pallas decode kernel over the (ring) cache: per-row slot_pos
+        # masking makes ragged co-batched requests exact.  Head axis is
+        # KV-major ((B, KV*G, hd)), matching the kernel's head->KV map
+        from repro.kernels.decode_attention.kernel import decode_attention
+        out = decode_attention(q.reshape(B, H, hd),
+                               k_cache.transpose(0, 2, 1, 3),
+                               v_cache.transpose(0, 2, 1, 3),
+                               slot_pos, cur_pos,
+                               window=window, softmax_scale=scale)
+    elif ctx is not None and ctx.decode_attn == "flash_decode":
         out = flash_decode.flash_decode(q, k_cache, v_cache, slot_pos, cur_pos,
                                         window=window, softmax_scale=scale,
                                         ctx=ctx)

@@ -29,7 +29,7 @@ class ParallelCtx:
     seq_axes: tuple = ("model",)
     # feature toggles (hillclimbing knobs; see EXPERIMENTS.md §Perf)
     moe_impl: str = "gather"          # gather | alltoall
-    decode_attn: str = "flash_decode"  # flash_decode | naive
+    decode_attn: str = "flash_decode"  # flash_decode | kernel | naive
     attn_impl: str = "grouped"        # grouped | flat (§Perf iteration 1:
                                       # flat repeats KV->H so the head axis
                                       # shards evenly over tp, killing GSPMD

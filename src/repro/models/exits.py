@@ -55,6 +55,58 @@ def apply_exit(cfg, params, h, *, ctx=None):
     return logits
 
 
+def exit_rows(cfg, h):
+    """The rows the exit head actually reads: (B, d).
+
+    features: the anchor cell (position 0); decode callers pass the
+    current-token hidden state directly.  RMSNorm is per-position, so
+    norming the selected rows equals selecting from the normed tensor —
+    this is what lets the fused kernel skip the rest of the sequence."""
+    if h.ndim == 2:
+        return h
+    return h[:, 0] if cfg.modality == "features" else h[:, -1]
+
+
+def exit_stats_unfused(h_rows, scale, w_out, *, eps: float = 1e-6,
+                       temperature: float = 1.0):
+    """Unfused reference for the fused exit kernel — materializes the full
+    (N, V) logits row, then reduces with the *same* finisher arithmetic as
+    the kernel (running max m, normalizer l = sum exp(logits - m),
+    conf = 1/l, lse = m + log l).  With a single vocab block the kernel's
+    online pass folds exactly once, so in interpret mode the fused path is
+    bit-for-bit equal to this function — the equality the kernel-serving
+    figure asserts.
+
+    h_rows: (N, d); scale: (d,); w_out: (d, V).
+    Returns (conf (N,), pred (N,) int32, max_logit (N,), lse (N,)).
+    """
+    h = h_rows.astype(jnp.float32)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    hn = h * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    logits = jax.lax.dot_general(hn, w_out.astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = logits / temperature
+    m = jnp.max(logits, axis=1)
+    l = jnp.maximum(jnp.sum(jnp.exp(logits - m[:, None]), axis=1), 1e-30)
+    conf = 1.0 / l
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    return conf, pred, m, m + jnp.log(l)
+
+
+def exit_stats_fused(h_rows, scale, w_out, *, eps: float = 1e-6,
+                     temperature: float = 1.0, block_rows: int = 8,
+                     block_v: int = 512, interpret: bool = True):
+    """Fused exit epilogue: RMSNorm -> matmul -> online (max, lse, argmax)
+    in one Pallas dispatch (repro.kernels.exit_confidence) — the V-sized
+    logits row never leaves the kernel.  Same signature/returns as
+    :func:`exit_stats_unfused`."""
+    from repro.kernels.exit_confidence.kernel import exit_confidence
+    return exit_confidence(h_rows, scale, w_out, eps=eps,
+                           temperature=temperature, block_rows=block_rows,
+                           block_v=block_v, interpret=interpret)
+
+
 def confidence_from_logits(logits, temperature: float = 1.0):
     """Max-softmax confidence over the trailing class axis (fp32).
 

@@ -42,10 +42,25 @@ def _partial_attend(q, k, v, slot_pos, cur_pos, window, softmax_scale):
 
 
 def flash_decode(q, k_cache, v_cache, slot_pos, cur_pos, *, window,
-                 softmax_scale, ctx, shard_kv_heads: bool = True):
-    """q: (B,KV,G,hd); caches: (B,S,KV,hd); slot_pos: (B,S); cur_pos: (B,)."""
+                 softmax_scale, ctx, shard_kv_heads: bool = True,
+                 use_kernel: bool = False):
+    """q: (B,KV,G,hd); caches: (B,S,KV,hd); slot_pos: (B,S); cur_pos: (B,).
+
+    ``use_kernel`` routes the unsharded (ctx is None) case through the
+    Pallas decode kernel (repro.kernels.decode_attention) — the kernel is
+    exactly this function's intra-shard partial, so the two paths agree up
+    to reduction order."""
     del shard_kv_heads  # KV heads stay replicated in this scheme
     if ctx is None:
+        if use_kernel:
+            from repro.kernels.decode_attention.kernel import decode_attention
+            B, KV, G, hd = q.shape
+            out = decode_attention(q.reshape(B, KV * G, hd),
+                                   k_cache.transpose(0, 2, 1, 3),
+                                   v_cache.transpose(0, 2, 1, 3),
+                                   slot_pos, cur_pos, window=window,
+                                   softmax_scale=softmax_scale)
+            return out.reshape(B, KV, G, hd)
         acc, m, l = _partial_attend(q, k_cache, v_cache, slot_pos, cur_pos,
                                     window, softmax_scale)
         return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

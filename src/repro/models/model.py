@@ -197,7 +197,11 @@ def apply_embed(cfg, params, inputs, ctx=None):
 
 
 def embed_one(cfg, params_embed, token, cur_pos):
-    """Decode-time embedding of a single token. token: (B,) or (B,ncb)."""
+    """Decode-time embedding of a single token. token: (B,) or (B,ncb);
+    features modality: a (B, FEATURE_DIM) frame (or {"features": ...})."""
+    if cfg.modality == "features":
+        feats = token["features"] if isinstance(token, dict) else token
+        return feats @ params_embed["w_in"]
     if cfg.modality == "audio_stub":
         parts = [jnp.take(params_embed["tok"][c], token[:, c], axis=0)
                  for c in range(cfg.num_codebooks)]
@@ -413,6 +417,44 @@ def init_decode_cache(cfg, batch, slots, dtype=None):
     return out
 
 
+def slice_decode_cache(st_cache, i: int, j: int = None):
+    """Rows [i:j) of one stage's decode cache (default the single row i).
+
+    Structure-aware: prefix/tail layer caches carry batch on axis 0, scan
+    caches are stacked over periods so batch sits on axis 1.  This is how
+    a serving executor keeps per-request cache state while batching
+    co-runners: slice rows out of a batched step, concat them back in
+    (:func:`concat_decode_caches`) for the next dispatch.
+    """
+    j = i + 1 if j is None else j
+    out = {"prefix": [jax.tree.map(lambda x: x[i:j], c)
+                      for c in st_cache["prefix"]],
+           "scan": None,
+           "tail": [jax.tree.map(lambda x: x[i:j], c)
+                    for c in st_cache["tail"]]}
+    if st_cache["scan"] is not None:
+        out["scan"] = jax.tree.map(lambda x: x[:, i:j], st_cache["scan"])
+    return out
+
+
+def concat_decode_caches(st_caches):
+    """Concatenate same-stage decode caches along the batch axis (the
+    inverse of :func:`slice_decode_cache`).  All members must share the
+    same slot count — in serving terms, the same length bucket."""
+    first = st_caches[0]
+    cat = lambda axis: (lambda *xs: jnp.concatenate(xs, axis=axis))
+    out = {"prefix": [jax.tree.map(cat(0), *[c["prefix"][k]
+                                             for c in st_caches])
+                      for k in range(len(first["prefix"]))],
+           "scan": None,
+           "tail": [jax.tree.map(cat(0), *[c["tail"][k]
+                                           for c in st_caches])
+                    for k in range(len(first["tail"]))]}
+    if first["scan"] is not None:
+        out["scan"] = jax.tree.map(cat(1), *[c["scan"] for c in st_caches])
+    return out
+
+
 def decode_step(cfg, params, cache, token, cur_pos, *, ctx=None,
                 upto_stage=None, conf_temperature=1.0):
     """One decode step through (up to) `upto_stage` stages.
@@ -484,12 +526,15 @@ def _stage_decode(cfg, stage_params, lay: StageLayout, st_cache, h, cur_pos,
 # stage-granular API (the scheduler's dispatch unit)
 # ---------------------------------------------------------------------------
 
-def stage_forward(cfg, params, stage_idx: int, h_or_inputs, *, ctx=None,
-                  q_chunk=1024, conf_temperature=1.0, mode="prefill"):
-    """Run ONE stage (paper's non-preemptive unit) and its exit head.
+def stage_trunk(cfg, params, stage_idx: int, h_or_inputs, *, ctx=None,
+                q_chunk=1024, mode="prefill"):
+    """ONE stage's trunk (embed + blocks), *without* the exit head.
 
-    stage 0 takes raw inputs (embeds them); later stages take hidden state.
-    Returns (h, logits, confidence).
+    stage 0 takes raw inputs (embeds them); later stages take hidden
+    state.  Returns the stage-out hidden state (B, S, d).  This is the
+    seam the kernel-backed stage fns build on: run the trunk here, then a
+    fused exit epilogue (repro.models.exits.exit_stats_fused) instead of
+    materializing the full logits tensor.
     """
     layouts = stage_layouts(cfg)
     lay = layouts[stage_idx]
@@ -501,6 +546,18 @@ def stage_forward(cfg, params, stage_idx: int, h_or_inputs, *, ctx=None,
     h, _aux, _ = _stage_apply_full(cfg, params["stages"][stage_idx], lay, h,
                                    mode=mode, positions=positions, ctx=ctx,
                                    collect_cache=False, q_chunk=q_chunk)
+    return h
+
+
+def stage_forward(cfg, params, stage_idx: int, h_or_inputs, *, ctx=None,
+                  q_chunk=1024, conf_temperature=1.0, mode="prefill"):
+    """Run ONE stage (paper's non-preemptive unit) and its exit head.
+
+    stage 0 takes raw inputs (embeds them); later stages take hidden state.
+    Returns (h, logits, confidence).
+    """
+    h = stage_trunk(cfg, params, stage_idx, h_or_inputs, ctx=ctx,
+                    q_chunk=q_chunk, mode=mode)
     lg = exits.apply_exit(
         cfg, {**params["exits"][stage_idx], **params["exit_shared"]}, h,
         ctx=ctx)
@@ -508,6 +565,27 @@ def stage_forward(cfg, params, stage_idx: int, h_or_inputs, *, ctx=None,
     while conf.ndim > 1:
         conf = conf.mean(-1)
     return h, lg, conf
+
+
+def stage_decode_step(cfg, params, stage_idx: int, st_cache, h, cur_pos, *,
+                      ctx=None):
+    """ONE stage of a decode step over its per-stage cache (the decode-mode
+    dispatch unit: the serving engine holds per-request caches device-side
+    and batches co-runners at the same stage through this function).
+
+    stage 0 takes the raw token(s) (embeds them); later stages take hidden
+    state.  ``st_cache`` is ``init_decode_cache(...)[stage_idx]``.  Routing
+    ``ctx.decode_attn == "kernel"`` runs attention through the Pallas
+    decode kernel, whose per-row slot_pos masking keeps ragged co-batched
+    requests exact.  Returns (h, new_st_cache).
+    """
+    lay = stage_layouts(cfg)[stage_idx]
+    if stage_idx == 0:
+        h = embed_one(cfg, params["embed"], h, cur_pos)      # (B, d)
+        if ctx is not None:
+            h = shard(h, ctx, ctx.dp, None)
+    return _stage_decode(cfg, params["stages"][stage_idx], lay, st_cache, h,
+                         cur_pos, ctx)
 
 
 # ---------------------------------------------------------------------------

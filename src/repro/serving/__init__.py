@@ -11,7 +11,8 @@ from repro.serving.engine import (Request, Response, ServingEngine,
                                   profile_host_overhead, profile_stages)
 from repro.serving.batch import (AdmissionController, BatchedPolicy,
                                  BatchedServingEngine, BatchedStageFns,
-                                 BatchPolicy, BatchTimeModel, StageBatcher,
+                                 BatchPolicy, BatchTimeModel,
+                                 LengthBucketTimeModel, StageBatcher,
                                  as_batch_policy, pad_batch,
                                  profile_batched_stages, simulate_batched)
 from repro.serving.registry import (available, register_clock,
@@ -40,7 +41,8 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
            "AdmissionController", "BatchedPolicy", "BatchedServingEngine",
            "BatchedStageFns", "BatchPolicy", "BatchTimeModel",
-           "StageBatcher", "as_batch_policy", "pad_batch",
+           "LengthBucketTimeModel", "StageBatcher", "as_batch_policy",
+           "pad_batch",
            "profile_batched_stages", "simulate_batched",
            "ClosedLoopSource", "EngineCore", "OracleExecutor", "StreamSource",
            "TableRecorder", "VirtualClock", "WallClock", "simulate_runtime",

@@ -18,14 +18,21 @@ from repro.serving.batch.engine import BatchedServingEngine
 from repro.serving.batch.policy import (BatchedPolicy, BatchPolicy,
                                         as_batch_policy)
 from repro.serving.batch.simulator import simulate_batched
-from repro.serving.batch.stage_fns import (BatchedStageFns, pad_batch,
+from repro.serving.batch.stage_fns import (BatchedStageFns, StagingBuffers,
+                                           pad_batch,
                                            profile_batched_stages,
                                            split_rows)
+from repro.serving.batch.time_model import (DEFAULT_LEN_BUCKETS,
+                                            LengthBucketTimeModel,
+                                            batch_wcet, len_bucket_for,
+                                            task_len_bucket)
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "BatchTimeModel",
     "BatchedPolicy", "BatchPolicy", "BatchedServingEngine",
-    "BatchedStageFns", "DEFAULT_BUCKETS", "StageBatcher", "as_batch_policy",
-    "bucket_for", "pad_batch", "profile_batched_stages", "simulate_batched",
-    "split_rows",
+    "BatchedStageFns", "DEFAULT_BUCKETS", "DEFAULT_LEN_BUCKETS",
+    "LengthBucketTimeModel", "StageBatcher", "StagingBuffers",
+    "as_batch_policy", "batch_wcet", "bucket_for", "len_bucket_for",
+    "pad_batch", "profile_batched_stages", "simulate_batched",
+    "split_rows", "task_len_bucket",
 ]

@@ -117,12 +117,32 @@ class StageBatcher:
     If even the leader alone is infeasible the singleton batch is returned
     unchanged; dispatch semantics then match the unbatched engine (the
     stage runs, the deadline check afterwards decides whether it counted).
+
+    When the time model carries a length axis
+    (:class:`repro.serving.batch.time_model.LengthBucketTimeModel`) and
+    tasks declare ``seq_len``, candidates are additionally filtered to the
+    leader's *length bucket* — a batched dispatch is one pre-compiled
+    (batch-bucket, len-bucket) shape, so only same-bucket co-runners can
+    share it — and WCETs are priced at that bucket instead of the
+    worst-case length.
     """
 
     def __init__(self, time_model: BatchTimeModel, max_batch: int = None):
         self.time_model = time_model
         self.max_batch = min(max_batch or time_model.max_batch,
                              time_model.max_batch)
+
+    def _wcet(self, stage: int, n: int, seq_len) -> float:
+        if seq_len is not None:
+            return self.time_model.wcet(stage, n, seq_len=seq_len)
+        return self.time_model.wcet(stage, n)
+
+    def _len_bucket(self, task):
+        lb_for = getattr(self.time_model, "len_bucket_for", None)
+        sl = getattr(task, "seq_len", None)
+        if lb_for is None or sl is None:
+            return None
+        return lb_for(sl)
 
     def form(self, leader, candidates, now: float, rank=None) -> list:
         stage = leader.executed
@@ -131,16 +151,19 @@ class StageBatcher:
         # the same code): no candidate ranking work on the dispatch hot path
         if self.max_batch <= 1:
             return batch
-        if not leader.fits_batch(now, self.time_model.wcet(stage, 1)):
+        lb = self._len_bucket(leader)
+        seq = None if lb is None else lb
+        if not leader.fits_batch(now, self._wcet(stage, 1, seq)):
             return batch
         cands = [c for c in candidates
-                 if c is not leader and c.executed == stage]
+                 if c is not leader and c.executed == stage
+                 and (lb is None or self._len_bucket(c) == lb)]
         cands.sort(key=rank if rank is not None
                    else (lambda t: (t.deadline, t.tid)))
         for c in cands:
             if len(batch) >= self.max_batch:
                 break
-            w = self.time_model.wcet(stage, len(batch) + 1)
+            w = self._wcet(stage, len(batch) + 1, seq)
             if c.fits_batch(now, w) and all(m.fits_batch(now, w)
                                             for m in batch):
                 batch.append(c)

@@ -24,11 +24,69 @@ from repro.serving.batch.batcher import (DEFAULT_BUCKETS, BatchTimeModel,
                                          bucket_for)
 
 
-def pad_batch(pytrees, bucket: int):
+class StagingBuffers:
+    """Reused per-bucket host staging for batch formation.
+
+    ``pad_batch`` used to re-stack the per-sample pytrees into fresh
+    device arrays on every dispatch — a per-dispatch allocation (and a
+    jitted concatenate) on the hot path.  A ``StagingBuffers`` instance
+    instead keeps one pinned numpy buffer per (bucket, leaf-struct): rows
+    are copied in place, padding rows replicate the last valid row, and
+    the same buffer object is handed to the jitted stage fn every time —
+    steady-state batch formation allocates nothing.
+
+    The returned masks are cached per (bucket, n) and must be treated as
+    read-only (they are shared across dispatches), as must the batched
+    leaves themselves: the jitted callee copies them to device before the
+    next ``stage`` call can overwrite them, which is the same lifetime
+    contract jit already imposes on donated host buffers.
+    """
+
+    def __init__(self):
+        self._bufs = {}    # (bucket, treedef, leafsig) -> list[np.ndarray]
+        self._masks = {}   # (bucket, n) -> np.ndarray(bool)
+
+    def mask(self, bucket: int, n: int) -> np.ndarray:
+        key = (bucket, n)
+        m = self._masks.get(key)
+        if m is None:
+            m = np.arange(bucket) < n
+            m.setflags(write=False)
+            self._masks[key] = m
+        return m
+
+    def stage(self, pytrees, bucket: int):
+        """In-place ``pad_batch``: returns ``(batched, mask)`` backed by
+        the reused per-bucket buffers."""
+        n = len(pytrees)
+        if not 0 < n <= bucket:
+            raise ValueError(f"cannot pad {n} samples into bucket {bucket}")
+        leaves0, treedef = jax.tree.flatten(pytrees[0])
+        sig = tuple((tuple(lf.shape), np.dtype(lf.dtype)) for lf in leaves0)
+        key = (bucket, treedef, sig)
+        bufs = self._bufs.get(key)
+        if bufs is None:
+            bufs = [np.empty((bucket,) + tuple(lf.shape[1:]),
+                             dtype=np.dtype(lf.dtype)) for lf in leaves0]
+            self._bufs[key] = bufs
+        for i, tree in enumerate(pytrees):
+            leaves = leaves0 if i == 0 else treedef.flatten_up_to(tree)
+            for buf, leaf in zip(bufs, leaves):
+                buf[i] = np.asarray(leaf)[0]
+        for buf in bufs:                   # replicate last valid row
+            buf[n:] = buf[n - 1]
+        return treedef.unflatten(bufs), self.mask(bucket, n)
+
+
+def pad_batch(pytrees, bucket: int, staging: StagingBuffers = None):
     """Stack single-sample pytrees (leading dim 1) into a padded batch.
 
     Returns ``(batched, mask)`` — mask[i] is True for the len(pytrees)
-    valid rows, False for the replicated padding rows."""
+    valid rows, False for the replicated padding rows.  With ``staging``,
+    the batch is formed in that instance's reused per-bucket buffers
+    (no per-dispatch allocation) instead of freshly stacked arrays."""
+    if staging is not None:
+        return staging.stage(pytrees, bucket)
     n = len(pytrees)
     if not 0 < n <= bucket:
         raise ValueError(f"cannot pad {n} samples into bucket {bucket}")
@@ -50,6 +108,7 @@ class BatchedStageFns:
         self.cfg = cfg
         self.buckets = tuple(sorted(buckets))
         self._fns = {}
+        self.staging = StagingBuffers()
 
     def fn(self, stage: int):
         if stage not in self._fns:
@@ -63,7 +122,8 @@ class BatchedStageFns:
 
         ``pytrees``: single-sample stage inputs (raw inputs for stage 0,
         hidden states after)."""
-        h, mask = pad_batch(pytrees, bucket_for(len(pytrees), self.buckets))
+        h, mask = pad_batch(pytrees, bucket_for(len(pytrees), self.buckets),
+                            staging=self.staging)
         h_out, logits, conf = self.fn(stage)(params, h)
         return h_out, logits, conf, mask
 

@@ -43,6 +43,7 @@ class Request:
     slo: Optional[str] = None      # SLO class name (repro.serving.service)
     tenant: Optional[str] = None   # tenant label (repro.serving.plane)
     request_id: Optional[str] = None  # idempotence key (durable plane)
+    seq_len: Optional[int] = None  # ragged input length (length-bucket WCETs)
 
 
 @dataclasses.dataclass

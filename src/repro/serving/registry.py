@@ -46,10 +46,12 @@ see ``docs/extending.md`` for the worked tutorial):
 * ``repro.serving.traffic`` — sources ``traffic`` (seeded open-loop
   arrival generators x per-class request mixes) and ``replay`` (recorded
   JSONL traces re-injected bit-for-bit);
-* ``repro.launch.serve`` — executor ``device-sharded`` (the batched
+* ``repro.launch.serve`` — executors ``device-sharded`` (the batched
   engine pjit-sharded over a ``(dp, tp)`` mesh, 1x1 fallback on
-  single-device hosts) plus the decode launcher's ``conf-target`` /
-  ``decode`` / ``token-loop``.
+  single-device hosts) and ``device-kernel`` (Pallas stage bodies: fused
+  exit-confidence epilogue, ragged decode batching over per-request KV
+  caches, length-bucketed WCETs) plus the decode launcher's
+  ``conf-target`` / ``decode`` / ``token-loop``.
 
 Example — a custom policy, end to end:
 
@@ -213,7 +215,11 @@ def _make_wall(args, ctx):
 @register_executor("oracle")
 def _make_oracle(args, ctx):
     from repro.serving.runtime.executor import OracleExecutor
-    return OracleExecutor(ctx.time_model, ctx.resources["conf_table"])
+    # pipeline_depth >= 3 enqueues depth-1 virtual device windows, same
+    # scaling as the device executors (one running + the rest queued)
+    return OracleExecutor(
+        ctx.time_model, ctx.resources["conf_table"],
+        max_inflight=max(1, int(ctx.spec.pipeline_depth) - 1))
 
 
 @register_executor("device-single")

@@ -158,7 +158,8 @@ class EngineCore:
         self.makespan = 0.0
         self._active: list = []
         self._presel = None                # (stage, batch) pre-selection
-        self._overlap_left = 0.0           # hideable host seconds this window
+        self._overlap_left = 0.0           # hideable host seconds, all windows
+        self._win_overlap = []             # per open window, oldest first
         self._pullins: list = []           # cancel-after-admission requests
 
     # ------------------------------------------------------------------
@@ -167,10 +168,20 @@ class EngineCore:
 
     def _account(self, cost: float) -> None:
         """One accounting rule: host work is hidden by the open device
-        window (pipelined mode keeps ``_overlap_left`` > 0 while a batch is
-        in flight), anything beyond it serializes with execution."""
+        window(s) (pipelined mode keeps ``_overlap_left`` > 0 while batches
+        are in flight), anything beyond it serializes with execution.
+        With several windows enqueued (``pipeline_depth >= 3``) the budget
+        drains oldest-window-first — host work happens during the window
+        that is actually running."""
         hidden = min(cost, self._overlap_left)
         self._overlap_left -= hidden
+        left = hidden
+        for i in range(len(self._win_overlap)):
+            if left <= 0.0:
+                break
+            take = min(left, self._win_overlap[i])
+            self._win_overlap[i] -= take     # entry stays (one per window)
+            left -= take
         serial = cost - hidden
         self.sched_charged += cost
         self.host_serial += serial
@@ -226,15 +237,16 @@ class EngineCore:
         the policy must run again."""
         stage, batch = presel
         leader = batch[0]
+        inflight = {id(t) for t in self.executor.running_tasks()}
         if not (leader in self._active and leader.executed == stage
                 and leader.executed < leader.assigned_depth
-                and leader.deadline > now):
+                and leader.deadline > now and id(leader) not in inflight):
             return None
         if self._batcher is None:
             return stage, [leader]
         cands = [t for t in self._active
                  if t.executed == stage and t.executed < t.assigned_depth
-                 and t.deadline > now]
+                 and t.deadline > now and id(t) not in inflight]
         return stage, self._batcher.form(
             leader, cands, now, rank=lambda t: self.policy.batch_rank(t, now))
 
@@ -258,8 +270,13 @@ class EngineCore:
             else:
                 self.presel_misses += 1
         if nb is None:
+            # in-flight members (possible while enqueueing extra windows at
+            # pipeline_depth >= 3) are never candidates for a fresh pick
+            inflight = {id(t) for t in self.executor.running_tasks()}
+            cands = [t for t in self._active if id(t) not in inflight] \
+                if inflight else self._active
             w0 = time.perf_counter()
-            nb = self.policy.next_batch(self._active, now)
+            nb = self.policy.next_batch(cands, now)
             self._account(self._cost(time.perf_counter() - w0))
         if nb is None or not nb[1]:
             return False
@@ -270,14 +287,22 @@ class EngineCore:
         self.n_dispatches += 1
         if self.pipeline_depth >= 2:
             # async host: the submit returned without blocking — everything
-            # the host does until completion can hide inside this window
-            self._overlap_left = self.executor.wcet(stage, len(batch))
+            # the host does until the window closes can hide inside it
+            # (windows stack when several batches are enqueued)
+            w = self.executor.wcet(stage, len(batch))
+            self._overlap_left += w
+            self._win_overlap.append(w)
             self._preselect(now)
         return True
 
     def _complete(self) -> None:
         stage, batch = self.executor.complete(self.clock)
-        self._overlap_left = 0.0              # the window closed
+        # the oldest window closed: drop its unused overlap budget; later
+        # still-open windows keep theirs (empty list -> 0.0, the legacy
+        # single-window behavior)
+        if self._win_overlap:
+            self._win_overlap.pop(0)
+        self._overlap_left = float(sum(self._win_overlap))
         for k, t in enumerate(batch):
             now = self.clock.now()
             if t.deadline >= now - _EPS:          # stage finished in time
@@ -337,6 +362,12 @@ class EngineCore:
             if not ex.busy:
                 self._expire(now)
                 self._dispatch(now)
+            elif self.pipeline_depth >= 3 and getattr(ex, "accepting", False):
+                # deep pipeline: stack further device windows behind the
+                # running one so the device never drains while the host
+                # works; an executor without an `accepting` property keeps
+                # the single-in-flight contract
+                self._dispatch(now)
             t_arr = src.next_time()
             t_fin = ex.finish_time() if ex.busy else math.inf
             if ex.busy and t_fin is None:
@@ -392,7 +423,8 @@ def simulate_runtime(policy, workload, time_model, conf_table, correct_table,
     pol = as_batch_policy(policy, time_model, max_batch=max_batch)
     core = EngineCore(
         pol, VirtualClock(charge_overhead=charge_overhead),
-        OracleExecutor(time_model, conf_table),
+        OracleExecutor(time_model, conf_table,
+                       max_inflight=max(1, pipeline_depth - 1)),
         ClosedLoopSource(workload, conf_table.shape[0],
                          time_model.single_times()),
         TableRecorder(conf_table, correct_table),

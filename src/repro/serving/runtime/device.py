@@ -6,6 +6,14 @@ batch on the host while the device computes; ``complete`` blocks on the
 results and reads the wall clock for the completion time, exactly the
 instant the legacy engines stamped after ``block_until_ready``.
 
+Multiple in-flight windows: the executor accepts up to ``max_inflight``
+submitted-but-uncompleted batches (a FIFO — XLA executes dispatches in
+submission order on one device stream).  The core enqueues further windows
+while ``accepting`` is true (``pipeline_depth >= 3``), so the device never
+drains between windows waiting for host work.  ``complete`` retires the
+oldest window; ``running_tasks`` covers every queued window so the core
+never double-dispatches an in-flight task.
+
 Per-request state (input/hidden pytree, deepest in-time exit) lives here:
 the executor is the layer that owns device data, so the engines' old
 ``_states`` dict moves in with it.  That dict is the serving stack's
@@ -16,11 +24,21 @@ never copied to host between stages) and **evicted on retire** (the
 recorder pops it via ``pop_state``).  ``cache_stats()`` reports
 live/peak/evicted counts so tests and metrics can hold the cache to that
 lifecycle.  ``ShardedDeviceExecutor`` (:mod:`repro.launch.sharded`) runs
-the same contract with stage fns sharded over a device mesh.
+the same contract with stage fns sharded over a device mesh;
+``KernelDeviceExecutor`` (:mod:`repro.launch.kernel`) swaps the stage
+bodies for Pallas-kernel-backed fns.
+
+Telemetry: per-stage host seconds (synchronous dispatch + commit work,
+measured on ``perf_counter`` so it is meaningful under any engine clock)
+vs device seconds (time the host spent *blocked* in ``block_until_ready``)
+— the measured decomposition behind the kernel-serving figure's
+"device-time-dominated" claim, surfaced via :meth:`device_time_stats`.
 """
 from __future__ import annotations
 
+import collections
 import math
+import time
 
 import jax
 import numpy as np
@@ -39,16 +57,21 @@ class SingleStageFns:
 
 
 class DeviceExecutor:
-    def __init__(self, stage_fns, params, time_model):
+    def __init__(self, stage_fns, params, time_model, *,
+                 max_inflight: int = 1):
         self.stage_fns = stage_fns      # object with .run(stage, params, [h])
         self.params = params
         self.time_model = time_model
+        self.max_inflight = max(1, int(max_inflight))
         self.total_busy = 0.0           # host-observed device-busy seconds
         self.states: dict = {}          # tid -> [request, hidden/inputs, exit]
         self.evictions = 0              # states popped on retire
         self.peak_cached = 0            # high-water mark of live states
-        self._running = None
+        self._inflight = collections.deque()   # submitted, oldest first
         self._done = None
+        # per-stage host/device seconds (see module docstring)
+        self.stage_host_time: dict = collections.defaultdict(float)
+        self.stage_device_time: dict = collections.defaultdict(float)
 
     # -- request state (the hidden-state cache) ------------------------
     def register(self, task, request) -> None:
@@ -66,18 +89,50 @@ class DeviceExecutor:
         return dict(live=len(self.states), peak=self.peak_cached,
                     evictions=self.evictions)
 
+    def device_time_stats(self) -> dict:
+        """Measured per-stage host vs device seconds (and their totals)."""
+        return dict(
+            host_time=float(sum(self.stage_host_time.values())),
+            device_time=float(sum(self.stage_device_time.values())),
+            stage_host_time={int(s): float(v)
+                             for s, v in sorted(self.stage_host_time.items())},
+            stage_device_time={int(s): float(v) for s, v in
+                               sorted(self.stage_device_time.items())})
+
+    # -- stage dispatch (subclass seam) --------------------------------
+    def _dispatch_stage(self, stage: int, tasks: list):
+        """Run the batched stage, returning the window's payload (opaque
+        to the core; ``_commit_from`` consumes it)."""
+        hs = [self.states[t.tid][1] for t in tasks]
+        h_out, logits, conf, _mask = self.stage_fns.run(stage, self.params,
+                                                        hs)
+        return h_out, logits, conf
+
+    def _block_on(self, payload) -> None:
+        jax.block_until_ready(payload[0])
+
+    def _finalize(self, payload):
+        h_out, logits, conf = payload
+        return h_out, np.asarray(logits), np.asarray(conf)
+
     # -- Executor contract ---------------------------------------------
     @property
     def busy(self) -> bool:
-        return self._running is not None
+        return bool(self._inflight)
+
+    @property
+    def accepting(self) -> bool:
+        """May the core submit another window while ``busy``?"""
+        return len(self._inflight) < self.max_inflight
 
     def wcet(self, stage: int, n: int) -> float:
         return self.time_model.wcet(stage, n)
 
     def submit(self, stage: int, tasks: list, now: float) -> None:
-        hs = [self.states[t.tid][1] for t in tasks]
-        h_out, logits, conf, _mask = self.stage_fns.run(stage, self.params, hs)
-        self._running = (stage, tasks, h_out, logits, conf, now)
+        w0 = time.perf_counter()
+        payload = self._dispatch_stage(stage, tasks)
+        self.stage_host_time[stage] += time.perf_counter() - w0
+        self._inflight.append((stage, tasks, payload, now))
 
     def finish_time(self):
         # real devices do not announce completion times — the core must
@@ -85,22 +140,25 @@ class DeviceExecutor:
         return None if self.busy else math.inf
 
     def complete(self, clock):
-        stage, tasks, h_out, logits, conf, t0 = self._running
-        self._running = None
-        jax.block_until_ready(h_out)
+        stage, tasks, payload, t0 = self._inflight.popleft()
+        w0 = time.perf_counter()
+        self._block_on(payload)
+        self.stage_device_time[stage] += time.perf_counter() - w0
         self.total_busy += clock.now() - t0
-        self._done = (h_out, np.asarray(logits), np.asarray(conf))
+        self._done = (stage, self._finalize(payload))
         return stage, tasks
 
     def commit(self, task, k: int) -> float:
-        h_out, logits, conf = self._done
+        stage, (h_out, logits, conf) = self._done
+        w0 = time.perf_counter()
         c = float(np.max(conf[k]))
         lg = logits[k]
         pred = int(np.argmax(lg[0], -1)) if lg.ndim >= 2 else int(np.argmax(lg))
         st = self.states[task.tid]
         st[1] = jax.tree.map(lambda x: x[k:k + 1], h_out)
         st[2] = (pred, c)
+        self.stage_host_time[stage] += time.perf_counter() - w0
         return c
 
     def running_tasks(self) -> list:
-        return list(self._running[1]) if self._running is not None else []
+        return [t for (_s, tasks, _p, _t0) in self._inflight for t in tasks]

@@ -15,20 +15,27 @@ is the executor's business:
   ``device-sharded`` from ``repro.launch.serve``) — the same contract with
   stage fns sharded over a ``(dp, tp)`` device mesh.
 
-Contract (single in-flight batch — the device is one non-preemptive
-resource; pipelining overlaps *host* work with it, not device work with
-device work):
+Contract (the device is one non-preemptive resource; pipelining overlaps
+*host* work with it, not device work with device work):
 
     wcet(stage, n)            feasibility price of a batch of n
     submit(stage, tasks, now) start the batch (must not block)
     busy                      a batch is in flight
-    finish_time()             known completion time, +inf when idle, or
-                              ``None`` when only blocking can tell (wall)
-    complete(clock)           finish the in-flight batch; advances/reads
-                              the clock; returns (stage, tasks)
+    finish_time()             known completion time of the *oldest*
+                              in-flight batch, +inf when idle, or ``None``
+                              when only blocking can tell (wall)
+    complete(clock)           finish the oldest in-flight batch; advances/
+                              reads the clock; returns (stage, tasks)
     commit(task, k)           record member k's stage output (called only
                               for members whose stage finished in time);
                               returns the measured confidence
+
+Executors hold a *single* in-flight batch unless they expose an
+``accepting`` property; when present and true, the core (at
+``pipeline_depth >= 3``) may ``submit`` further batches while ``busy`` —
+they queue behind the running one (FIFO) and ``complete`` retires them
+oldest-first.  ``running_tasks()`` must cover every queued window so the
+core never double-dispatches an in-flight task.
 """
 from __future__ import annotations
 
@@ -63,33 +70,50 @@ class OracleExecutor(Executor):
     """Virtual device over oracle tables and a ``BatchTimeModel``.
 
     ``total_busy`` accumulates device-occupied virtual seconds (the
-    denominator of the paper's overhead fraction).
+    denominator of the paper's overhead fraction).  ``max_inflight > 1``
+    models a deep dispatch pipeline (``pipeline_depth >= 3``): further
+    windows queue FIFO behind the running one and start the moment it
+    finishes — the virtual-clock analog of multiple enqueued device
+    windows.
     """
 
-    def __init__(self, time_model, conf_table):
+    def __init__(self, time_model, conf_table, *, max_inflight: int = 1):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
         self.time_model = time_model
         self.conf_table = conf_table
+        self.max_inflight = int(max_inflight)
         self.total_busy = 0.0
-        self._running = None         # (stage, tasks, finish_time)
+        self._inflight: list = []    # (stage, tasks, finish_time), oldest 1st
 
     @property
     def busy(self) -> bool:
-        return self._running is not None
+        return bool(self._inflight)
+
+    @property
+    def accepting(self) -> bool:
+        """Room for another enqueued window (core dispatches extra windows
+        at ``pipeline_depth >= 3`` only while this holds)."""
+        return len(self._inflight) < self.max_inflight
 
     def wcet(self, stage: int, n: int) -> float:
         return self.time_model.wcet(stage, n)
 
     def submit(self, stage: int, tasks: list, now: float) -> None:
-        dur = self.time_model.wcet(stage, len(tasks))
+        # length-aware when the model has a length axis and the batch
+        # declares seq_lens (repro.serving.batch.time_model.batch_wcet)
+        from repro.serving.batch.time_model import batch_wcet
+        dur = batch_wcet(self.time_model, stage, tasks)
         self.total_busy += dur
-        self._running = (stage, tasks, now + dur)
+        # a queued window starts when the one ahead of it finishes
+        start = max(now, self._inflight[-1][2]) if self._inflight else now
+        self._inflight.append((stage, tasks, start + dur))
 
     def finish_time(self):
-        return self._running[2] if self._running is not None else math.inf
+        return self._inflight[0][2] if self._inflight else math.inf
 
     def complete(self, clock) -> tuple:
-        stage, tasks, t_fin = self._running
-        self._running = None
+        stage, tasks, t_fin = self._inflight.pop(0)
         clock.advance_to(t_fin)
         return stage, tasks
 
@@ -98,4 +122,4 @@ class OracleExecutor(Executor):
         return float(self.conf_table[task.sample, task.executed - 1])
 
     def running_tasks(self) -> list:
-        return list(self._running[1]) if self._running is not None else []
+        return [t for _, tasks, _ in self._inflight for t in tasks]

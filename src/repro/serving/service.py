@@ -210,6 +210,8 @@ class ServeSpec:
             raise ValueError("metrics_interval must be >= 0")
         if self.executor == "device-sharded":
             self._validate_sharded_args()
+        if self.executor == "device-kernel":
+            self._validate_kernel_args()
         if self.source == "live":
             bound = self.source_args.get("bound")
             if bound is not None and int(bound) < 1:
@@ -269,6 +271,42 @@ class ServeSpec:
                     f"[dp_axis, tp_axis], got {axes!r}")
         if float(ea.get("collective", 0.0)) < 0:
             raise ValueError("device-sharded 'collective' must be >= 0")
+
+    def _validate_kernel_args(self) -> None:
+        """Shape-level checks for ``executor="device-kernel"`` args (the
+        factory lives in :mod:`repro.launch.kernel`).  Fail at spec time,
+        not at first dispatch on a warm engine."""
+        # lazy: the factory (and its arg list) lives with the executor it
+        # validates; repro.launch.kernel does not import this module back
+        from repro.launch.kernel import KERNEL_ARGS
+        ea = self.executor_args
+        unknown = set(ea) - set(KERNEL_ARGS)
+        if unknown:
+            raise ValueError(f"unknown device-kernel executor_args: "
+                             f"{sorted(unknown)}; known: "
+                             f"{sorted(KERNEL_ARGS)}")
+        mode = ea.get("mode", "classifier")
+        if mode not in ("classifier", "decode"):
+            raise ValueError(f"device-kernel mode {mode!r} not in "
+                             "('classifier', 'decode')")
+        for key in ("block_rows", "block_v"):
+            v = ea.get(key, 8)
+            if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+                raise ValueError(f"device-kernel {key!r} must be an "
+                                 f"integer >= 1, got {v!r}")
+        lbs = ea.get("len_buckets")
+        if lbs is not None:
+            if (not isinstance(lbs, (list, tuple)) or not lbs
+                    or any(isinstance(b, bool) or not isinstance(b, int)
+                           or b < 1 for b in lbs)
+                    or list(lbs) != sorted(set(lbs))):
+                raise ValueError(
+                    "device-kernel 'len_buckets' must be a strictly "
+                    f"ascending list of integers >= 1, got {lbs!r}")
+        lm = ea.get("len_marginal")
+        if lm is not None and not 0 <= float(lm) <= 1:
+            raise ValueError("device-kernel 'len_marginal' must be in "
+                             "[0, 1]")
 
     def slo_class(self, name: Optional[str]) -> Optional[SLOClass]:
         if name is None:
@@ -331,6 +369,11 @@ class ServiceMetrics(SimResult):
     admitted_miss_rate: float = 0.0
     admitted_accuracy: Optional[float] = None
     components: dict = dataclasses.field(default_factory=dict)
+    # device-executor telemetry (empty for modeled/oracle executors):
+    # measured per-stage host vs device seconds and hidden-state-cache
+    # lifecycle counts (live/peak/evictions) — see DeviceExecutor
+    executor_times: dict = dataclasses.field(default_factory=dict)
+    executor_cache: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self, *, per_request: bool = False, **kw) -> str:
         return json.dumps(self.to_dict(per_request=per_request), **kw)
@@ -705,7 +748,12 @@ class ServiceRecorder:
                     for r in adm_recs) / len(adm_recs)
         adm = core.admission
         spec = self.service.spec
+        ex = core.executor
+        dts = getattr(ex, "device_time_stats", None)
+        cst = getattr(ex, "cache_stats", None)
         return ServiceMetrics(
+            executor_times=dts() if dts is not None else {},
+            executor_cache=cst() if cst is not None else {},
             **self._base_fields(core), per_class=per_class,
             per_tenant=per_tenant,
             rejected=(adm.rejected if adm is not None else 0)
@@ -909,11 +957,14 @@ class Service:
 
     def _make_task_factory(self, executor, tm, eff_mb):
         spec = self.spec
-        # §II-B deadline adjustment: host overhead + one non-preemptible
-        # (batched) stage, priced at the largest batch this service
-        # dispatches — identical to the legacy engines' rule
+        # §II-B deadline adjustment: host overhead + the non-preemptible
+        # region, priced at the largest batch this service dispatches.
+        # At pipeline_depth <= 2 that region is one batched stage (the
+        # legacy engines' rule); at depth >= 3 the executor queues up to
+        # depth-1 windows behind the running one, so a newly urgent task
+        # can be blocked for that many worst-case stages before it runs
         worst = max(tm.wcet(s, eff_mb) for s in range(tm.num_stages))
-        adj = spec.host_overhead + worst
+        adj = spec.host_overhead + worst * max(1, spec.pipeline_depth - 1)
         cfg = self.resources.get("cfg")
         mandatory = cfg.mandatory_stages if cfg is not None \
             else int(spec.source_args.get("mandatory_stages", 1))
@@ -939,7 +990,8 @@ class Service:
             task = Task(arrival=now,
                         deadline=request.arrival + rel - adj,
                         stage_times=tm.single_times(), mandatory=mandatory,
-                        sample=request.sample, client=request.client)
+                        sample=request.sample, client=request.client,
+                        seq_len=getattr(request, "seq_len", None))
             if slo is not None:
                 task.weight = slo.utility_weight
                 if slo.depth_cap is not None:

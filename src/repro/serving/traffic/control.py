@@ -56,6 +56,11 @@ class ServiceSnapshot:
     # tenant -> {"queued": source backlog, "n": retired this window}
     # (multi-tenant front door, repro.serving.plane)
     per_tenant: dict = dataclasses.field(default_factory=dict)
+    # device-executor telemetry (zero for modeled executors): host/device
+    # seconds spent this window and hidden-state-cache residents now
+    host_time: float = 0.0
+    device_time: float = 0.0
+    cache_live: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -79,6 +84,8 @@ class MetricsStreamer:
         self._next_t = self.interval
         self._last_t = 0.0
         self._last_busy = 0.0
+        self._last_host = 0.0
+        self._last_dev = 0.0
         self._last_rejected = 0
         self._last_capped = 0
         # bound by ServiceRecorder once the engine exists
@@ -128,8 +135,13 @@ class MetricsStreamer:
             fin = [f for f in self.inner.finished if f["tid"] in tids]
             if fin:
                 acc = sum(f["correct"] for f in fin) / len(fin)
-        busy = getattr(self.core.executor, "total_busy", 0.0) \
-            if self.core is not None else 0.0
+        ex = self.core.executor if self.core is not None else None
+        busy = getattr(ex, "total_busy", 0.0)
+        dts = getattr(ex, "device_time_stats", None)
+        times = dts() if dts is not None else {}
+        host_t = float(times.get("host_time", 0.0))
+        dev_t = float(times.get("device_time", 0.0))
+        cst = getattr(ex, "cache_stats", None)
         span = max(now - self._last_t, 1e-12)
         rejected, capped = self._counts()
         qsize = self.source.qsize() if self.source is not None else 0
@@ -153,13 +165,17 @@ class MetricsStreamer:
             utilization=min(1.0, (busy - self._last_busy) / span),
             rejected=rejected - self._last_rejected,
             capped=capped - self._last_capped,
-            intake_depth=intake, per_tenant=per_tenant)
+            intake_depth=intake, per_tenant=per_tenant,
+            host_time=host_t - self._last_host,
+            device_time=dev_t - self._last_dev,
+            cache_live=int(cst()["live"]) if cst is not None else 0)
         self.snapshots.append(snap)
         if self.callback is not None:
             self.callback(snap)
         self._window = []
         self._last_t = now
         self._last_busy = busy
+        self._last_host, self._last_dev = host_t, dev_t
         self._last_rejected, self._last_capped = rejected, capped
         while self._next_t <= now:
             self._next_t += self.interval

@@ -31,20 +31,27 @@ class TrafficClass:
     relative mix probability.  ``rel_deadline`` pins a fixed relative
     deadline; ``rel_range = (lo, hi)`` draws one per request U[lo, hi]
     (the paper's §IV deadline model).  When both are None the SLO class
-    supplies the deadline at admission.
+    supplies the deadline at admission.  ``seq_range = (lo, hi)`` draws a
+    ragged input length U{lo..hi} per request and stamps it into
+    ``Request.seq_len`` — admission and batching then price the request
+    by its length bucket (``LengthBucketTimeModel``), and same-stage
+    co-runners batch only within a bucket.
     """
 
     slo: Optional[str] = None
     share: float = 1.0
     rel_deadline: Optional[float] = None
     rel_range: Optional[tuple] = None
+    seq_range: Optional[tuple] = None
 
     @classmethod
     def from_dict(cls, d: dict) -> "TrafficClass":
         rr = d.get("rel_range")
+        sr = d.get("seq_range")
         return cls(slo=d.get("slo"), share=float(d.get("share", 1.0)),
                    rel_deadline=d.get("rel_deadline"),
-                   rel_range=tuple(rr) if rr is not None else None)
+                   rel_range=tuple(rr) if rr is not None else None,
+                   seq_range=tuple(sr) if sr is not None else None)
 
     def to_dict(self) -> dict:
         d = {"slo": self.slo, "share": self.share}
@@ -52,6 +59,8 @@ class TrafficClass:
             d["rel_deadline"] = self.rel_deadline
         if self.rel_range is not None:
             d["rel_range"] = list(self.rel_range)
+        if self.seq_range is not None:
+            d["seq_range"] = list(self.seq_range)
         return d
 
 
@@ -82,9 +91,14 @@ class RequestMix:
         if c.rel_range is not None:
             rel = float(rng.uniform(*c.rel_range))
         sample = int(rng.integers(self.n_samples))
+        seq_len = None
+        if c.seq_range is not None:
+            lo, hi = c.seq_range
+            seq_len = int(rng.integers(int(lo), int(hi) + 1))
         inputs = self.inputs_fn(sample) if self.inputs_fn is not None else None
         return Request(inputs=inputs, rel_deadline=rel, sample=sample,
-                       client=client, arrival=float(offset), slo=c.slo)
+                       client=client, arrival=float(offset), slo=c.slo,
+                       seq_len=seq_len)
 
     def stream(self, rng: np.random.Generator, offsets) -> list:
         """The full open-loop stream: [(offset, Request)] in arrival order

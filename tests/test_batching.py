@@ -222,6 +222,57 @@ def test_pad_batch_shapes_and_mask():
         bucket_for(9, (1, 2, 4, 8))
 
 
+def test_staging_buffers_match_legacy_pad_batch():
+    # regression: staged batch formation must produce identical shapes,
+    # masks, and values to the legacy re-stacking path
+    from repro.serving.batch import StagingBuffers
+    st = StagingBuffers()
+    for n in (1, 3, 4):
+        xs = [{"a": np.full((1, 2), i, np.float32),
+               "b": np.full((1, 3, 2), 10 + i, np.int32)} for i in range(n)]
+        legacy, lm = pad_batch(xs, 4)
+        staged, sm = pad_batch(xs, 4, staging=st)
+        assert np.array_equal(lm, sm)
+        for k in ("a", "b"):
+            assert staged[k].shape == np.asarray(legacy[k]).shape
+            assert staged[k].dtype == np.asarray(legacy[k]).dtype
+            assert np.array_equal(np.asarray(legacy[k]), staged[k])
+
+
+def test_staging_buffers_reuse_no_realloc():
+    # steady state: same bucket + leaf structure -> the very same numpy
+    # buffers and the very same (cached, read-only) mask every dispatch
+    from repro.serving.batch import StagingBuffers
+    st = StagingBuffers()
+    mk = lambda v: {"a": np.full((1, 2), v, np.float32)}
+    b1, m1 = st.stage([mk(0), mk(1)], 4)
+    b2, m2 = st.stage([mk(5), mk(6)], 4)
+    assert b1["a"] is b2["a"] and m1 is m2
+    assert not m1.flags.writeable
+    assert np.all(b2["a"][:2] == [[5, 5], [6, 6]])
+    assert np.all(b2["a"][2:] == 6)                          # pad = last row
+    # a different valid count re-pads in place with a fresh cached mask
+    b3, m3 = st.stage([mk(9)], 4)
+    assert b3["a"] is b1["a"] and m3 is not m1
+    assert np.all(b3["a"] == 9)
+
+
+def test_batched_stage_fns_staging_results_stable(anytime_model):
+    # BatchedStageFns.run with its built-in staging gives bitwise-identical
+    # outputs dispatch after dispatch (buffer reuse must not leak rows)
+    cfg, params = anytime_model
+    inputs = make_inputs(cfg, jax.random.PRNGKey(7), 2, 12)
+    singles = split_rows(inputs, 2)
+    fns = BatchedStageFns(cfg, buckets=(1, 4))
+    outs = []
+    for _ in range(2):
+        h, lg, cf, mask = fns.run(0, params, singles)
+        outs.append((np.asarray(lg), np.asarray(cf), mask.copy()))
+    assert np.array_equal(outs[0][0], outs[1][0])
+    assert np.array_equal(outs[0][1], outs[1][1])
+    assert np.array_equal(outs[0][2], outs[1][2])
+
+
 # ---------------------------------------------------------------------------
 # closed-loop semantics (satellite: reissue at completion, not deadline)
 # ---------------------------------------------------------------------------
