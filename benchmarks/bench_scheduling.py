@@ -35,6 +35,12 @@ Figures reproduced (CPU-scale analog of CIFAR-10/ImageNet ResNet-3-stage):
            tenant fairness under skewed overload, idempotent journaled
            submission, and bit-for-bit mid-stream crash recovery
            [extension]
+  zoo      the multi-model zoo (repro.serving.zoo): cross-model
+           preemption (rtdeepiot-zoo scope=global) vs per-model-siloed
+           planning on the model-mix 2x-overload scenario, scored on
+           weighted admitted accuracy, plus the single-member zoo spec's
+           bit-for-bit parity against the plain device-batched path
+           [extension]
 
 All rows print as CSV (name,metric,value triples per configuration) and are
 also returned as dicts (``SimResult.to_dict`` rows) for EXPERIMENTS.md
@@ -937,6 +943,200 @@ def plane_claims(data):
     return claims
 
 
+# the two-model zoo the zoo figure serves: an expensive high-weight "llm"
+# head next to a cheap "vision" model on one device (3 anytime stages
+# each — the oracle tables' depth axis)
+ZOO_MODELS = {
+    "llm": {"stage_times": [0.006, 0.010, 0.014], "marginal": 0.15,
+            "weight": 2.0},
+    "vision": {"stage_times": [0.003, 0.005, 0.007], "marginal": 0.15},
+}
+
+
+def _zoo_mix_stage_times():
+    """Capacity anchor for the ``model-mix`` scenario: the mix-weighted
+    mean per-stage times, so the scenario's 2.0x factor is 2x of the
+    *blended* full-depth capacity (anchoring on either model alone would
+    under- or over-state the overload)."""
+    from repro.serving.traffic.scenarios import MODEL_MIX
+    L = len(ZOO_MODELS["llm"]["stage_times"])
+    tot = sum(c["share"] for c in MODEL_MIX)
+    return tuple(
+        sum(c["share"] * ZOO_MODELS[c["model"]]["stage_times"][s]
+            for c in MODEL_MIX) / tot
+        for s in range(L))
+
+
+def _zoo_tables(conf, correct):
+    """Per-model oracle tables: llm reads the trained tables as-is,
+    vision a sample-rolled view — per-sample curves differ across models
+    while confidence/correctness stay consistent within each."""
+    roll = conf.shape[0] // 3
+    return {"llm": {"conf": conf, "correct": correct},
+            "vision": {"conf": np.roll(conf, roll, axis=0),
+                       "correct": np.roll(correct, roll, axis=0)}}
+
+
+def _zoo_weighted(res, ztabs):
+    """Weighted admitted accuracy with the paper's utility-accrual
+    semantics (a missed deadline earns zero, whatever the late answer
+    was); weights are the end-to-end ``Task.weight`` = SLO utility
+    weight x model weight."""
+    num = den = 0.0
+    adm = miss = 0
+    for r in res.per_request:
+        if r["rejected"]:
+            continue
+        adm += 1
+        miss += int(r["missed"])
+        w = float(r.get("weight") or 1.0)
+        den += w
+        ok = (not r["missed"]) and r["depth"] >= 1 and bool(
+            ztabs[r["model"]]["correct"][r["sample"], r["depth"] - 1])
+        num += w * float(ok)
+    return dict(weighted_acc=num / den if den else 0.0,
+                admitted_miss=miss / adm if adm else 0.0, admitted=adm)
+
+
+def fig_zoo(conf, correct, n_requests=600, e2e_requests=24, seed=0):
+    """The multi-model zoo (repro.serving.zoo), two parts.
+
+    **Cross-model preemption** — the ``model-mix`` scenario (2x of the
+    blended two-model capacity) through ``policy="rtdeepiot-zoo"`` with
+    admission on, ``scope="global"`` (one FPTAS over both models: sheds
+    the globally least-valuable optional stages, whichever model owns
+    them) vs ``scope="siloed"`` (each model planned independently against
+    the full device — every silo believes it owns the machine, so the
+    union plan overcommits).  Scored on weighted admitted accuracy.
+
+    **Single-model parity** — a one-model zoo spec
+    (``executor="zoo-device"`` + ``rtdeepiot-zoo``) on the real anytime
+    classifier must reproduce the plain ``device-batched`` +
+    ``rtdeepiot`` run **bit-for-bit**: the blended time model of a
+    single-member zoo *is* that member's table, so the zoo machinery adds
+    nothing but the model id.
+    """
+    from repro.serving.traffic import scenario_spec
+    rows = []
+    st = _zoo_mix_stage_times()
+    ztabs = _zoo_tables(conf, correct)
+    data = {"models": {m: dict(cfg) for m, cfg in ZOO_MODELS.items()}}
+    for label, scope in (("zoo-global", "global"), ("zoo-siloed", "siloed")):
+        spec = _dc.replace(
+            scenario_spec(
+                "model-mix", policy="rtdeepiot-zoo",
+                policy_args={"predictor": "exp", "scope": scope},
+                admission={"mode": "reject"}, stage_times=st,
+                n_requests=n_requests, seed=seed, models=ZOO_MODELS),
+            executor="zoo-oracle")
+        res = Service.from_spec(spec, zoo_tables=ztabs,
+                                n_samples=conf.shape[0]).run()
+        _emit(rows, "zoo", "model-mix", label, res)
+        data[scope] = _zoo_weighted(res, ztabs)
+        data[scope]["per_model"] = res.per_model
+        for m, pm in sorted(res.per_model.items()):
+            print(f"zoo,model-mix/{m},{label},served={pm['served']},"
+                  f"rejected={pm['rejected']},miss={pm['miss_rate']:.4f},"
+                  f"depth={pm['mean_depth']:.2f},"
+                  f"wacc={pm['weighted_accuracy']}")
+        print(f"zoo,model-mix,{label},"
+              f"wacc={data[scope]['weighted_acc']:.4f},"
+              f"amiss={data[scope]['admitted_miss']:.4f},"
+              f"admitted={data[scope]['admitted']}")
+    e2e = _zoo_e2e(rows, n_requests=e2e_requests, seed=seed)
+    return rows, data, e2e
+
+
+def _zoo_e2e(rows, n_requests=24, seed=0):
+    """Real-model leg of the zoo figure: a single-member zoo
+    (zoo-device + rtdeepiot-zoo) vs the plain device-batched path on the
+    same traffic stream, virtual clock, bit-for-bit."""
+    import dataclasses
+
+    import jax
+
+    import repro.launch.serve  # noqa: F401 — registers zoo-device
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.traffic import scenario_spec
+
+    cfg = get_config("anytime-classifier")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    pool = rng.normal(size=(48, 1, 16, 32)).astype(np.float32)
+    labels = rng.integers(0, cfg.vocab_size, size=48)
+    st = (0.002, 0.003, 0.004)
+    base = scenario_spec(
+        "steady", policy="rtdeepiot",
+        policy_args={"predictor": "exp", "prior_curve": [0.5, 0.7, 0.85]},
+        stage_times=st, n_requests=n_requests, seed=seed)
+    base.batching = {"buckets": [1, 2, 4], "stage_times": list(st),
+                     "marginal": 0.25}
+    # the zoo leg: same stream, every request tagged with the one model
+    zspec = dataclasses.replace(
+        base, executor="zoo-device", policy="rtdeepiot-zoo",
+        models={"m": {"stage_times": list(st), "buckets": [1, 2, 4],
+                      "marginal": 0.25}},
+        source_args={**base.source_args,
+                     "mix": [dict(c, model="m")
+                             for c in base.source_args["mix"]]})
+    common = dict(cfg=cfg, params=params, n_samples=len(pool),
+                  labels=labels,
+                  traffic_inputs=lambda s: {"features": pool[s]})
+    runs = {}
+    for name, spec, extra in (
+            ("device-batched",
+             dataclasses.replace(base, executor="device-batched"), {}),
+            ("zoo-device", zspec,
+             {"zoo_models": {"m": {"cfg": cfg, "params": params}}})):
+        svc = Service.from_spec(spec, **common, **extra)
+        res = svc.run()
+        _emit(rows, "zoo", "e2e", name, res)
+        runs[name] = (svc, res)
+
+    def key(recs):
+        return [(r["sample"], r["prediction"], r["conf"], r["depth"],
+                 r["missed"]) for r in recs]
+    zx = runs["zoo-device"][0].executor
+    parity = key(runs["device-batched"][1].per_request) \
+        == key(runs["zoo-device"][1].per_request)
+    print(f"zoo,e2e,parity,bitwise={parity}")
+    return dict(parity=parity, cache=zx.cache_stats(),
+                n_requests=n_requests,
+                served=runs["zoo-device"][1].n_requests)
+
+
+def zoo_claims(data, e2e):
+    """Headline check for the model zoo: under 2x mixed-model overload,
+    global cross-model shedding scores >= per-model-siloed planning on
+    weighted admitted accuracy at < 1% admitted misses, and a
+    single-member zoo spec reproduces the device-batched path
+    bit-for-bit with a fully-evicted state cache."""
+    g, s = data["global"], data["siloed"]
+    cache_clean = e2e["cache"]["live"] == 0 \
+        and e2e["cache"]["evictions"] >= e2e["n_requests"]
+    claims = {
+        "zoo_models": sorted(data["models"]),
+        "zoo_overload_weighted_admitted_acc": {
+            "global": round(g["weighted_acc"], 4),
+            "siloed": round(s["weighted_acc"], 4)},
+        "zoo_overload_admitted_miss": {
+            "global": round(g["admitted_miss"], 4),
+            "siloed": round(s["admitted_miss"], 4)},
+        "zoo_overload_admitted": {"global": g["admitted"],
+                                  "siloed": s["admitted"]},
+        "zoo_e2e_parity_bitwise": bool(e2e["parity"]),
+        "zoo_e2e_cache": e2e["cache"],
+        "zoo_claim_met": bool(
+            g["weighted_acc"] >= s["weighted_acc"] - 1e-9
+            and g["admitted_miss"] < 0.01
+            and e2e["parity"] and cache_clean
+            and e2e["served"] == e2e["n_requests"]),
+    }
+    print("ZOO CLAIMS:", claims)
+    return claims
+
+
 def summarize_claims(all_rows):
     """Validate the paper's headline claims on our reproduction."""
     byfig = {}
@@ -1029,23 +1229,27 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workloads, synthetic tables if artifact "
                          "missing, no artifact writes (CI job)")
-    ap.add_argument("--only", choices=("plane",), default=None,
+    ap.add_argument("--only", choices=("plane", "zoo"), default=None,
                     help="run a single figure and merge its rows/claims "
                          "into artifacts/scheduling_results.json")
     args = ap.parse_args(argv)
 
-    if args.only == "plane":
-        # the plane figure needs no trained artifact: synthetic tables
-        # are deterministic and the claims are about scheduling, not
-        # accuracy
+    if args.only is not None:
+        # partial regen: these figures need no trained artifact —
+        # synthetic tables are deterministic and the claims are about
+        # scheduling, not accuracy
         path = os.path.join(ART, "oracle_tables.npz")
         if os.path.exists(path):
             z = np.load(path)
             conf, correct = z["confidence"], z["correct"]
         else:
             conf, correct = synthetic_tables()
-        rows, pdata = fig_plane(conf, correct)
-        claims = plane_claims(pdata)
+        if args.only == "plane":
+            rows, pdata = fig_plane(conf, correct)
+            claims = plane_claims(pdata)
+        else:
+            rows, zdata, ze2e = fig_zoo(conf, correct)
+            claims = zoo_claims(zdata, ze2e)
         os.makedirs(ART, exist_ok=True)
         out = os.path.join(ART, "scheduling_results.json")
         blob = {"rows": [], "claims": {}}
@@ -1053,7 +1257,7 @@ def main(argv=None):
             with open(out) as f:
                 blob = json.load(f)
         blob["rows"] = [r for r in blob.get("rows", [])
-                        if r.get("figure") != "plane"] + rows
+                        if r.get("figure") != args.only] + rows
         blob.setdefault("claims", {}).update(claims)
         with open(out, "w") as f:
             json.dump(blob, f, indent=1)
@@ -1088,6 +1292,9 @@ def main(argv=None):
         rows += krows
         prows, pdata = fig_plane(conf, correct)
         rows += prows
+        zrows, zdata, ze2e = fig_zoo(conf, correct, n_requests=150,
+                                     e2e_requests=12)
+        rows += zrows
         claims = summarize_claims(rows)
         claims.update(batch_claims(speedups))
         claims.update(async_claims(comp))
@@ -1095,6 +1302,7 @@ def main(argv=None):
         claims.update(sharded_claims(smodeled, se2e))
         claims.update(kernel_claims(kdeep, kragged, ke2e, comp))
         claims.update(plane_claims(pdata))
+        claims.update(zoo_claims(zdata, ze2e))
         print(f"SMOKE OK: {len(rows)} rows")
         return rows, claims
 
@@ -1116,6 +1324,8 @@ def main(argv=None):
     rows += krows
     prows, pdata = fig_plane(conf, correct)
     rows += prows
+    zrows, zdata, ze2e = fig_zoo(conf, correct)
+    rows += zrows
     claims = summarize_claims(rows)
     claims.update(batch_claims(speedups))
     claims.update(async_claims(comp))
@@ -1123,6 +1333,7 @@ def main(argv=None):
     claims.update(sharded_claims(smodeled, se2e))
     claims.update(kernel_claims(kdeep, kragged, ke2e, comp))
     claims.update(plane_claims(pdata))
+    claims.update(zoo_claims(zdata, ze2e))
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "scheduling_results.json"), "w") as f:
         json.dump({"rows": rows, "claims": claims}, f, indent=1)

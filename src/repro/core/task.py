@@ -26,6 +26,7 @@ class Task:
     client: int = 0
     tid: int = dataclasses.field(default_factory=lambda: next(_ids))
     seq_len: Optional[int] = None    # ragged input length (length-bucket WCETs)
+    model: Optional[str] = None      # model-zoo id (None: single-model serving)
 
     # runtime state ---------------------------------------------------------
     executed: int = 0                # stages completed so far

@@ -175,6 +175,17 @@ def _make_device_sharded(args, ctx):
     return build_sharded_executor(args, ctx)
 
 
+@register_executor("zoo-device")
+def _make_zoo_device(args, ctx):
+    """Multi-model ``device-batched``: one accelerator, per-model batched
+    stage fns, windows routed on the batch's model id (the
+    :class:`repro.serving.zoo.device.ZooDeviceExecutor`).  resources:
+    ``zoo_models`` = ``{model: {"cfg": ..., "params": ...,
+    "stage_fns": optional}}``; spec: ``ServeSpec.models``."""
+    from repro.serving.zoo.device import build_zoo_device_executor
+    return build_zoo_device_executor(args, ctx)
+
+
 @register_executor("device-kernel")
 def _make_device_kernel(args, ctx):
     """``device-batched`` with Pallas-kernel stage bodies: fused

@@ -36,6 +36,11 @@ from repro.serving.traffic import (MetricsStreamer, RequestMix, Scenario,
 from repro.serving.plane import (DurableQueue, FrontDoor, Journal, Record,
                                  journal_stats, recover, scan_journal,
                                  verify_recovery)
+# the multi-model zoo registers "rtdeepiot-zoo" and "zoo-oracle"
+# ("zoo-device" is jax-heavy and registers from repro.launch.serve)
+from repro.serving.zoo import (ModelZoo, ZooAdmissionController, ZooModel,
+                               ZooOracleExecutor, ZooRTDeepIoT,
+                               ZooTimeModel)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
@@ -55,4 +60,6 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_arrival_process", "record_trace", "scenario_spec",
            "verify_replay",
            "DurableQueue", "FrontDoor", "Journal", "Record",
-           "journal_stats", "recover", "scan_journal", "verify_recovery"]
+           "journal_stats", "recover", "scan_journal", "verify_recovery",
+           "ModelZoo", "ZooAdmissionController", "ZooModel",
+           "ZooOracleExecutor", "ZooRTDeepIoT", "ZooTimeModel"]

@@ -50,30 +50,36 @@ class AdmissionController:
         self.capped = 0
 
     # ------------------------------------------------------------------
-    def _amortized(self, stage: int) -> float:
-        tm = self.time_model
+    def _tm_for(self, task):
+        """WCET table pricing ``task`` — the hook per-model controllers
+        (:class:`repro.serving.zoo.ZooAdmissionController`) override."""
+        return self.time_model
+
+    def _amortized(self, stage: int, tm=None) -> float:
+        tm = self.time_model if tm is None else tm
         return tm.per_item(stage, tm.max_batch)
 
     def decide(self, active, task, now: float) -> AdmissionDecision:
         if self.mode == "off":
             return AdmissionDecision(True, None, "off")
-        tm = self.time_model
+        tm = self._tm_for(task)
         mand_solo = sum(tm.wcet(s, 1) for s in range(task.mandatory))
         if not task.fits_batch(now, mand_solo):
             return AdmissionDecision(False, None, "mandatory-infeasible")
         # optimistic backlog: mandatory work still owed by the active set,
         # at the best per-item rate batching can buy
         backlog = sum(
-            sum(self._amortized(s)
+            sum(self._amortized(s, self._tm_for(t))
                 for s in range(t.executed, max(t.mandatory, t.executed)))
             for t in active)
-        own = sum(self._amortized(s) for s in range(task.mandatory))
+        own = sum(self._amortized(s, tm) for s in range(task.mandatory))
         if now + (backlog + own) * self.headroom > task.deadline:
             if self.mode == "reject":
                 return AdmissionDecision(False, None, "overload")
             return AdmissionDecision(True, task.mandatory, "overload-capped")
         if self.mode == "depth_cap":
-            d = task.feasible_depth(now, stage_time=lambda s: tm.wcet(s, 1))
+            d = task.feasible_depth(now,
+                                    stage_time=lambda s: tm.wcet(s, 1))
             if d < task.num_stages:
                 return AdmissionDecision(True, max(task.mandatory, d),
                                          "deadline-capped")

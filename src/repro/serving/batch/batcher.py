@@ -125,24 +125,65 @@ class StageBatcher:
     (batch-bucket, len-bucket) shape, so only same-bucket co-runners can
     share it — and WCETs are priced at that bucket instead of the
     worst-case length.
+
+    Multi-model serving (``repro.serving.zoo``): tasks carrying a
+    ``model`` id only co-batch with *same-model* co-runners (a batched
+    dispatch runs exactly one model's stage fn), and when the time model
+    dispatches per model (a ``for_model`` method, e.g.
+    :class:`~repro.serving.zoo.ZooTimeModel`) the batch is priced by the
+    *leader's* model's WCET table.  Tasks without a model (the whole
+    single-model stack) are unaffected.
+
+    ``dp`` > 1 (row-sharded executors) prefers dp-multiple batch sizes:
+    when the greedy fill lands strictly below its bucket boundary at a
+    non-dp-multiple size, the lowest-ranked co-runners are deferred down
+    to the nearest dp multiple *iff* that lowers the priced bucket — a
+    padded row should never cross a replica when deferring it buys a
+    smaller (faster) bucket.  ``dp=1`` is the identity.
     """
 
-    def __init__(self, time_model: BatchTimeModel, max_batch: int = None):
+    def __init__(self, time_model: BatchTimeModel, max_batch: int = None,
+                 dp: int = 1):
         self.time_model = time_model
         self.max_batch = min(max_batch or time_model.max_batch,
                              time_model.max_batch)
+        self.dp = max(1, int(dp))
 
-    def _wcet(self, stage: int, n: int, seq_len) -> float:
+    def _model_tm(self, model):
+        """The WCET table pricing ``model``'s dispatches (the shared table
+        unless the time model dispatches per model)."""
+        if model is None:
+            return self.time_model
+        fm = getattr(self.time_model, "for_model", None)
+        return self.time_model if fm is None else fm(model)
+
+    def _wcet(self, stage: int, n: int, seq_len, tm=None) -> float:
+        tm = self.time_model if tm is None else tm
         if seq_len is not None:
-            return self.time_model.wcet(stage, n, seq_len=seq_len)
-        return self.time_model.wcet(stage, n)
+            return tm.wcet(stage, n, seq_len=seq_len)
+        return tm.wcet(stage, n)
 
     def _len_bucket(self, task):
-        lb_for = getattr(self.time_model, "len_bucket_for", None)
+        tm = self._model_tm(getattr(task, "model", None))
+        lb_for = getattr(tm, "len_bucket_for", None)
         sl = getattr(task, "seq_len", None)
         if lb_for is None or sl is None:
             return None
         return lb_for(sl)
+
+    def _prefer_dp_multiple(self, batch, tm) -> None:
+        """Defer the tail of the fill order down to a dp multiple when that
+        lowers the priced bucket (see class docstring).  Never touches the
+        leader; deferred tasks stay queued for the next window."""
+        n = len(batch)
+        if self.dp <= 1 or n <= 1 or n % self.dp == 0:
+            return
+        bucket = tm.bucket_for(n)
+        if n == bucket:
+            return                     # exact bucket hit: no padding at all
+        m = (n // self.dp) * self.dp
+        if m >= 1 and tm.bucket_for(m) < bucket:
+            del batch[m:]
 
     def form(self, leader, candidates, now: float, rank=None) -> list:
         stage = leader.executed
@@ -151,20 +192,24 @@ class StageBatcher:
         # the same code): no candidate ranking work on the dispatch hot path
         if self.max_batch <= 1:
             return batch
+        lmodel = getattr(leader, "model", None)
+        tm = self._model_tm(lmodel)
         lb = self._len_bucket(leader)
         seq = None if lb is None else lb
-        if not leader.fits_batch(now, self._wcet(stage, 1, seq)):
+        if not leader.fits_batch(now, self._wcet(stage, 1, seq, tm)):
             return batch
         cands = [c for c in candidates
                  if c is not leader and c.executed == stage
+                 and getattr(c, "model", None) == lmodel
                  and (lb is None or self._len_bucket(c) == lb)]
         cands.sort(key=rank if rank is not None
                    else (lambda t: (t.deadline, t.tid)))
         for c in cands:
             if len(batch) >= self.max_batch:
                 break
-            w = self._wcet(stage, len(batch) + 1, seq)
+            w = self._wcet(stage, len(batch) + 1, seq, tm)
             if c.fits_batch(now, w) and all(m.fits_batch(now, w)
                                             for m in batch):
                 batch.append(c)
+        self._prefer_dp_multiple(batch, tm)
         return batch

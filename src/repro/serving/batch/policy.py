@@ -94,10 +94,10 @@ class BatchedPolicy(BatchPolicy):
 
 
 def as_batch_policy(policy: Policy, time_model, max_batch: int = None,
-                    charge_formation: bool = True) -> BatchPolicy:
+                    charge_formation: bool = True, dp: int = 1) -> BatchPolicy:
     """Wrap a plain Policy for the batched engine/simulator (idempotent)."""
     if isinstance(policy, BatchPolicy):
         return policy
     return BatchedPolicy(policy, StageBatcher(time_model,
-                                              max_batch=max_batch),
+                                              max_batch=max_batch, dp=dp),
                          charge_formation=charge_formation)

@@ -142,7 +142,19 @@ class LengthBucketTimeModel(BatchTimeModel):
 def batch_wcet(time_model, stage: int, tasks) -> float:
     """Price one batched dispatch of ``tasks`` at ``stage``: length-aware
     when the model carries a length axis and every member declares a
-    ``seq_len``, conservative (worst length bucket) otherwise."""
+    ``seq_len``, conservative (worst length bucket) otherwise.
+
+    Model-aware when the time model dispatches per model (a ``for_model``
+    method, e.g. :class:`~repro.serving.zoo.ZooTimeModel`) and the batch
+    carries a ``model`` id: the batch is priced by that model's own WCET
+    table (the :class:`~repro.serving.batch.batcher.StageBatcher` only
+    seats same-model co-runners, so the first member's model is the
+    batch's)."""
+    model = getattr(tasks[0], "model", None) if tasks else None
+    if model is not None:
+        fm = getattr(time_model, "for_model", None)
+        if fm is not None:
+            time_model = fm(model)
     if isinstance(time_model, LengthBucketTimeModel):
         sls = [t.seq_len for t in tasks
                if getattr(t, "seq_len", None) is not None]
@@ -153,7 +165,13 @@ def batch_wcet(time_model, stage: int, tasks) -> float:
 
 def task_len_bucket(time_model, task):
     """The task's length bucket under ``time_model`` (None when either
-    side carries no length information)."""
+    side carries no length information).  Resolves per-model tables the
+    same way :func:`batch_wcet` does."""
+    model = getattr(task, "model", None)
+    if model is not None:
+        fm = getattr(time_model, "for_model", None)
+        if fm is not None:
+            time_model = fm(model)
     if isinstance(time_model, LengthBucketTimeModel):
         sl = getattr(task, "seq_len", None)
         if sl is not None:

@@ -44,6 +44,7 @@ class Request:
     tenant: Optional[str] = None   # tenant label (repro.serving.plane)
     request_id: Optional[str] = None  # idempotence key (durable plane)
     seq_len: Optional[int] = None  # ragged input length (length-bucket WCETs)
+    model: Optional[str] = None    # model-zoo id (repro.serving.zoo)
 
 
 @dataclasses.dataclass

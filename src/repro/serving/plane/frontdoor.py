@@ -244,6 +244,7 @@ class FrontDoor:
                                                          float(cfg["rate"])))))
             for name, cfg in self.tenants.items() if cfg.get("rate")}
         self.counts: dict = {}         # tenant -> submitted / quota_rejected
+        self.model_counts: dict = {}   # zoo model -> same counters
 
     def submit(self, request, *, tenant: Optional[str] = None,
                slo: Optional[str] = None, at: Optional[float] = None,
@@ -256,12 +257,20 @@ class FrontDoor:
         c = self.counts.setdefault(name,
                                    dict(submitted=0, quota_rejected=0))
         c["submitted"] += 1
+        model = getattr(request, "model", None)
+        mc = None
+        if model is not None:
+            mc = self.model_counts.setdefault(
+                model, dict(submitted=0, quota_rejected=0))
+            mc["submitted"] += 1
         t_sub = at
         if t_sub is None:
             t_sub = (self.service._ensure_live().clock.now()
                      if self.service._is_realtime() else 0.0)
         bucket = self._buckets.get(name)
         if bucket is not None and not bucket.allow(t_sub):
+            if mc is not None:
+                mc["quota_rejected"] += 1
             return self._quota_reject(request, name, slo, t_sub, c)
         if self.queue is not None:
             return self.queue.submit(request, slo=slo, at=at)
@@ -280,7 +289,8 @@ class FrontDoor:
                 slo=slo if slo is not None else getattr(request, "slo", None),
                 tenant=tenant, request_id=rid,
                 outcome=dict(rejected=True, missed=True, depth=0,
-                             quota=True), sync=True)
+                             quota=True), sync=True,
+                model=getattr(request, "model", None))
         cls = svc.spec.slo_class(slo if slo is not None
                                  else getattr(request, "slo", None))
         return svc._reject_overflow(ResponseHandle(svc, request), request,
@@ -290,14 +300,15 @@ class FrontDoor:
         return self.service.drain()
 
     def stats(self) -> dict:
-        """In-process health: per-tenant counters, queue depths, journal
-        durability lag."""
+        """In-process health: per-tenant (and, for zoo-tagged requests,
+        per-model) counters, queue depths, journal durability lag."""
         svc = self.service
         src = svc._live.source if svc._live is not None else None
         depths = src.tenant_depths() \
             if src is not None and hasattr(src, "tenant_depths") else {}
         out = dict(
             tenants={t: dict(c) for t, c in self.counts.items()},
+            models={m: dict(c) for m, c in self.model_counts.items()},
             queued=depths,
             queue_depth=(src.qsize() if src is not None else 0)
             + len(svc._buffer),

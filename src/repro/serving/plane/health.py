@@ -20,15 +20,22 @@ def journal_stats(path: str) -> dict:
     ``pending`` — request_ids durably SUBMITted but not yet terminal
     (what :func:`~repro.serving.plane.queue.recover` would redeliver);
     ``per_tenant`` — submitted/admitted/retired/rejected/staged counts
-    plus per-tenant pending depth; ``counts`` — records by kind;
-    ``segments``/``records``/``last_seq`` — journal shape.
+    plus per-tenant pending depth; ``per_model`` — the same fold keyed
+    by ``Record.model`` (only for records carrying a model-zoo id, so a
+    single-model journal reports ``per_model={}``); ``counts`` — records
+    by kind; ``segments``/``records``/``last_seq`` — journal shape.
     """
     header, records = scan_journal(path)
     counts: dict = {}
     per_tenant: dict = {}
+    per_model: dict = {}
     submitted: dict = {}               # request_id -> tenant
+    model_of: dict = {}                # request_id -> model (when zoo-tagged)
     terminal: set = set()
     last_seq = -1
+    kind_key = {"SUBMIT": "submitted", "ADMIT": "admitted",
+                "STAGE": "staged", "RETIRE": "retired",
+                "REJECT": "rejected"}
     for r in records:
         counts[r.kind] = counts.get(r.kind, 0) + 1
         if r.seq is not None:
@@ -37,19 +44,27 @@ def journal_stats(path: str) -> dict:
         t = per_tenant.setdefault(tenant, dict(
             submitted=0, admitted=0, staged=0, retired=0, rejected=0,
             pending=0))
-        key = {"SUBMIT": "submitted", "ADMIT": "admitted",
-               "STAGE": "staged", "RETIRE": "retired",
-               "REJECT": "rejected"}.get(r.kind)
+        key = kind_key.get(r.kind)
         if key is not None:
             t[key] += 1
+        model = getattr(r, "model", None)
+        if model is not None and key is not None:
+            m = per_model.setdefault(model, dict(
+                submitted=0, admitted=0, staged=0, retired=0, rejected=0,
+                pending=0))
+            m[key] += 1
         if r.request_id is not None:
             if r.kind == "SUBMIT":
                 submitted[r.request_id] = tenant
+                if model is not None:
+                    model_of[r.request_id] = model
             elif r.kind in TERMINAL_KINDS:
                 terminal.add(r.request_id)
     pending = sorted(rid for rid in submitted if rid not in terminal)
     for rid in pending:
         per_tenant[submitted[rid]]["pending"] += 1
+        if rid in model_of:
+            per_model[model_of[rid]]["pending"] += 1
     return dict(
         path=path,
         version=header.get("version"),
@@ -62,4 +77,5 @@ def journal_stats(path: str) -> dict:
         queue_depth=len(pending),
         pending=pending,
         per_tenant=per_tenant,
+        per_model=per_model,
     )

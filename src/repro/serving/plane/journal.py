@@ -172,6 +172,7 @@ class Journal:
                tenant: Optional[str] = None,
                request_id: Optional[str] = None,
                outcome: Optional[dict] = None,
+               model: Optional[str] = None,
                sync: bool = False) -> Optional[Record]:
         """Durably append one record; returns it, or ``None`` when an
         identical ``(kind, request_id)`` record already exists (the
@@ -181,7 +182,7 @@ class Journal:
                          client=int(client), slo=slo,
                          rel_deadline=rel_deadline, outcome=outcome,
                          kind=kind, tenant=tenant, request_id=request_id,
-                         seq=self._seq)
+                         seq=self._seq, model=model)
             key = rec.dedup_key()
             if key is not None and key in self._seen:
                 return None
@@ -251,7 +252,8 @@ class JournalObserver:
         self._rids[task.tid] = (tenant, rid)
         self.journal.append("ADMIT", offset=now, sample=task.sample,
                             client=task.client, tenant=tenant,
-                            request_id=rid)
+                            request_id=rid,
+                            model=getattr(request, "model", None))
 
     def on_stage(self, task, now: float) -> None:
         ent = self._rids.get(task.tid)
@@ -260,7 +262,8 @@ class JournalObserver:
         self.journal.append("STAGE", offset=now, sample=task.sample,
                             client=task.client, tenant=ent[0],
                             request_id=ent[1],
-                            outcome={"depth": task.executed})
+                            outcome={"depth": task.executed},
+                            model=getattr(task, "model", None))
 
     def on_retire(self, rec: dict, now: float) -> None:
         rid = rec.get("request_id")
@@ -275,4 +278,5 @@ class JournalObserver:
             "REJECT" if rec["rejected"] else "RETIRE", offset=now,
             sample=rec["sample"], client=rec["client"], slo=rec["slo"],
             rel_deadline=rec.get("rel_deadline"), tenant=rec.get("tenant"),
-            request_id=rid, outcome=outcome, sync=True)
+            request_id=rid, outcome=outcome, model=rec.get("model"),
+            sync=True)

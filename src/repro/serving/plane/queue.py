@@ -68,6 +68,7 @@ class DurableQueue:
             slo=slo if slo is not None else getattr(request, "slo", None),
             rel_deadline=request.rel_deadline,
             tenant=getattr(request, "tenant", None), request_id=rid,
+            model=getattr(request, "model", None),
             sync=True)                 # durable before the handle exists
         handle = self.service.submit(request, slo=slo, at=offset)
         self._handles[rid] = handle

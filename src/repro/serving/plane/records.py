@@ -20,7 +20,9 @@ Record kinds (write-ahead journal, ``repro.serving.plane.journal``)::
 
 Version history: 1 — trace events only (no ``kind``); 2 — this unified
 schema (``kind`` + ``tenant``/``request_id``/``seq`` fields, emitted
-only when set, so EVENT rows are unchanged on disk).
+only when set, so EVENT rows are unchanged on disk).  The optional
+``model`` field (model-zoo serving) follows the same emit-only-when-set
+rule, so v1 and v2 files without it round-trip byte-identically.
 """
 from __future__ import annotations
 
@@ -52,6 +54,7 @@ class Record:
     tenant: Optional[str] = None
     request_id: Optional[str] = None
     seq: Optional[int] = None          # journal offset (monotonic append)
+    model: Optional[str] = None        # model-zoo id (emitted only when set)
 
     def to_json(self) -> str:
         d = dict(offset=self.offset, sample=self.sample, client=self.client,
@@ -60,6 +63,8 @@ class Record:
             d["kind"] = self.kind
         if self.tenant is not None:
             d["tenant"] = self.tenant
+        if self.model is not None:
+            d["model"] = self.model
         if self.request_id is not None:
             d["request_id"] = self.request_id
         if self.seq is not None:
@@ -81,14 +86,16 @@ class Record:
                    rel_deadline=d.get("rel_deadline"),
                    outcome=d.get("outcome"), kind=kind,
                    tenant=d.get("tenant"), request_id=d.get("request_id"),
-                   seq=int(seq) if seq is not None else None)
+                   seq=int(seq) if seq is not None else None,
+                   model=d.get("model"))
 
     def request(self) -> Request:
         """Re-materialize the submission this record describes."""
         return Request(inputs=None, rel_deadline=self.rel_deadline,
                        sample=self.sample, client=self.client,
                        arrival=self.offset, slo=self.slo,
-                       tenant=self.tenant, request_id=self.request_id)
+                       tenant=self.tenant, request_id=self.request_id,
+                       model=self.model)
 
     def dedup_key(self):
         """Idempotent-append key: a journal refuses a second record with

@@ -146,7 +146,8 @@ class EngineCore:
         # without one get a batcher over the executor's time model
         if batcher is None:
             tm = getattr(executor, "time_model", None)
-            batcher = StageBatcher(tm, max_batch=self.max_batch) \
+            batcher = StageBatcher(tm, max_batch=self.max_batch,
+                                   dp=getattr(executor, "dp", 1)) \
                 if tm is not None else None
         self._batcher = batcher
         # telemetry -----------------------------------------------------

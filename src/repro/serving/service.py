@@ -162,6 +162,12 @@ class ServeSpec:
     # fair-queueing quantum and the task's utility weight; ``rate``/
     # ``burst`` define the tenant's token-bucket submission quota.
     tenants: dict = dataclasses.field(default_factory=dict)
+    # model id -> per-model config (stage_times/marginal/buckets/times/
+    # len_buckets/len_marginal/mandatory/weight/utility): the multi-model
+    # zoo (repro.serving.zoo).  Requests carrying ``Request.model`` are
+    # priced, planned and admitted against their own model's tables;
+    # empty dict = single-model serving, bit-for-bit unchanged.
+    models: dict = dataclasses.field(default_factory=dict)
 
     # -- round trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -230,6 +236,11 @@ class ServeSpec:
                 raise ValueError(f"tenant {name!r}: rate must be > 0")
             if float(cfg.get("burst", 1.0)) < 1:
                 raise ValueError(f"tenant {name!r}: burst must be >= 1")
+        if self.models:
+            # lazy: the zoo subsystem owns its config schema, the same
+            # discipline as _validate_sharded_args
+            from repro.serving.zoo import validate_models
+            validate_models(self.models)
         if self.source == "frontdoor":
             disc = self.source_args.get("discipline")
             if disc is not None and disc not in ("drr", "fifo"):
@@ -363,6 +374,11 @@ class ServiceMetrics(SimResult):
     deadlines while rejects fail fast."""
     per_class: dict = dataclasses.field(default_factory=dict)
     per_tenant: dict = dataclasses.field(default_factory=dict)
+    # model id -> {n, served, rejected, miss_rate, mean_depth,
+    # mean_latency, accuracy, weighted_accuracy} — the multi-model zoo's
+    # breakdown (empty when no request carried a model id); accuracy
+    # fields are None when correctness is unmeasurable for that executor
+    per_model: dict = dataclasses.field(default_factory=dict)
     rejected: int = 0
     capped: int = 0
     cancelled: int = 0
@@ -621,7 +637,8 @@ class ServiceRecorder:
             arrival=task.arrival, deadline=task.deadline, offset=t0,
             rel_deadline=self.service._req_rels.pop(task.tid, None),
             depth_cap=task.depth_cap, tenant=tenant, request_id=rid,
-            latency=latency, rejected=rejected, weight=task.weight)
+            latency=latency, rejected=rejected, weight=task.weight,
+            model=getattr(task, "model", None))
         self.records.append(rec)
         if self.observer is not None:
             # the WAL's terminal record, fsynced before _resolve below —
@@ -731,6 +748,52 @@ class ServiceRecorder:
                 n=0, served=0, rejected=0, miss_rate=0.0, mean_depth=0.0,
                 mean_latency=0.0))
             entry["rejected"] += cnt
+        # per-model breakdown (repro.serving.zoo): correctness comes from
+        # the TableRecorder's finished rows (matched by tid) or a
+        # ``labels`` resource; None where neither can measure it
+        correct_by_tid = {}
+        if isinstance(self.inner, TableRecorder):
+            correct_by_tid = {f["tid"]: f["correct"]
+                              for f in self.inner.finished}
+        labels = self.service.resources.get("labels")
+
+        def _rec_correct(r):
+            if r["tid"] in correct_by_tid:
+                return bool(correct_by_tid[r["tid"]])
+            if labels is not None and r.get("prediction") is not None:
+                return bool(r["prediction"] == labels[r["sample"]])
+            return None
+        per_model: dict = {}
+        for r in self.records:
+            if r.get("model") is None:
+                continue
+            m = per_model.setdefault(r["model"], dict(
+                n=0, served=0, missed=0, rejected=0, depth_sum=0,
+                latency_sum=0.0, correct=0, measured=0, w_sum=0.0,
+                w_correct=0.0))
+            m["n"] += 1
+            m["missed"] += int(r["missed"])
+            m["rejected"] += int(r["rejected"])
+            m["served"] += int(not r["rejected"] and not r["missed"])
+            m["depth_sum"] += r["depth"]
+            m["latency_sum"] += r["latency"]
+            c = _rec_correct(r)
+            if c is not None and not r["rejected"]:
+                w = float(r.get("weight", 1.0))
+                m["measured"] += 1
+                m["correct"] += int(c)
+                m["w_sum"] += w
+                m["w_correct"] += w * int(c)
+        for name, m in per_model.items():
+            n = m["n"]
+            per_model[name] = dict(
+                n=n, served=m["served"], rejected=m["rejected"],
+                miss_rate=m["missed"] / n, mean_depth=m["depth_sum"] / n,
+                mean_latency=m["latency_sum"] / n,
+                accuracy=(m["correct"] / m["measured"]
+                          if m["measured"] else None),
+                weighted_accuracy=(m["w_correct"] / m["w_sum"]
+                                   if m["w_sum"] else None))
         adm_recs = [r for r in self.records if not r["rejected"]]
         admitted_miss = (sum(r["missed"] for r in adm_recs) / len(adm_recs)
                          if adm_recs else 0.0)
@@ -755,7 +818,7 @@ class ServiceRecorder:
             executor_times=dts() if dts is not None else {},
             executor_cache=cst() if cst is not None else {},
             **self._base_fields(core), per_class=per_class,
-            per_tenant=per_tenant,
+            per_tenant=per_tenant, per_model=per_model,
             rejected=(adm.rejected if adm is not None else 0)
             + self.service._n_bp_rejected,
             capped=(adm.capped if adm is not None else 0)
@@ -816,6 +879,7 @@ class Service:
         self.policy = None              # base policy of the last build
         self.executor = None
         self.clock = None
+        self.zoo = None                 # ModelZoo of the last build
         self.responses: list = []       # device-mode legacy Response list
         self.snapshots: list = []       # streamed metrics of the last run
         self._handles: dict = {}
@@ -847,6 +911,24 @@ class Service:
     def _resolve_batching(self):
         b = dict(self.spec.batching or {})
         tm = self.resources.get("time_model")
+        self.zoo = None
+        if self.spec.models:
+            # multi-model serving: the zoo's blended ZooTimeModel replaces
+            # the batching-derived table (its per-model dispatch is what
+            # the batcher/admission/batch_wcet resolve); ``batching`` keys
+            # other than the table — mode/max_batch/charge_formation —
+            # still apply
+            from repro.serving.zoo import ModelZoo
+            zoo = self.resources.get("zoo")
+            if zoo is None:
+                zoo = ModelZoo.from_spec(self.spec.models)
+            self.zoo = zoo
+            if tm is None:
+                tm = zoo.time_model
+            if b.get("mode") == "none":
+                return tm, 1, False
+            return tm, b.get("max_batch"), bool(b.get("charge_formation",
+                                                      True))
         mode = b.get("mode")
         if mode is None:
             mode = "bucketed" if (tm is not None or b.get("buckets")
@@ -907,7 +989,12 @@ class Service:
         admission = self.resources.get("admission")
         if admission is None and spec.admission.get("mode") not in (None,
                                                                     "off"):
-            admission = AdmissionController(
+            cls = AdmissionController
+            if self.zoo is not None:
+                # price each request against its own model's tables
+                from repro.serving.zoo import ZooAdmissionController
+                cls = ZooAdmissionController
+            admission = cls(
                 tm, mode=spec.admission["mode"],
                 headroom=float(spec.admission.get("headroom", 1.0)))
         eff_mb = min(max_batch or tm.max_batch, tm.max_batch)
@@ -922,8 +1009,19 @@ class Service:
             source = self._component("source", spec.source, spec.source_args,
                                      ctx)
         self.responses = []
+        ztabs = self.resources.get("zoo_tables") if self.zoo is not None \
+            else None
         if hasattr(executor, "pop_state"):
             inner = ResponseRecorder(executor, self.responses)
+        elif ztabs and all("conf" in d and "correct" in d
+                           for d in ztabs.values()):
+            # per-model oracle aggregation (repro.serving.zoo)
+            from repro.serving.zoo import ZooTableRecorder
+            inner = ZooTableRecorder(
+                {m: d["conf"] for m, d in ztabs.items()},
+                {m: d["correct"] for m, d in ztabs.items()},
+                conf_table=self.resources.get("conf_table"),
+                correct_table=self.resources.get("correct_table"))
         elif "conf_table" in self.resources \
                 and "correct_table" in self.resources:
             inner = TableRecorder(self.resources["conf_table"],
@@ -938,7 +1036,8 @@ class Service:
                                        self.resources.get("on_metrics"))
         recorder = ServiceRecorder(self, inner, executor, streamer=streamer)
         pol = as_batch_policy(policy, tm, max_batch=max_batch,
-                              charge_formation=charge_formation)
+                              charge_formation=charge_formation,
+                              dp=getattr(executor, "dp", 1))
         core = EngineCore(pol, clock, executor, source, recorder,
                           admission=admission,
                           pipeline_depth=spec.pipeline_depth,
@@ -969,6 +1068,7 @@ class Service:
         mandatory = cfg.mandatory_stages if cfg is not None \
             else int(spec.source_args.get("mandatory_stages", 1))
         observer = self.resources.get("observer")  # durable-plane journal
+        zoo = self.zoo
 
         def factory(request, now):
             handle = getattr(request, "_handle", None)
@@ -987,16 +1087,34 @@ class Service:
                         "request has no rel_deadline and its SLO class "
                         "defines none")
                 rel = slo.rel_deadline
+            model = getattr(request, "model", None)
+            zm = zoo.model(model) if (zoo is not None
+                                      and model is not None) else None
+            # per-model stage costs and mandatory depth: the FPTAS,
+            # feasibility checks and §II-E swaps all read Task.stage_times,
+            # so a zoo task plans against *its own* model's solo WCETs.
+            # The §II-B adjustment stays the blended worst case — the
+            # non-preemptible region may hold any model's batch.
             task = Task(arrival=now,
                         deadline=request.arrival + rel - adj,
-                        stage_times=tm.single_times(), mandatory=mandatory,
+                        stage_times=(zm.time_model.single_times()
+                                     if zm is not None
+                                     else tm.single_times()),
+                        mandatory=zm.mandatory if zm is not None
+                        else mandatory,
                         sample=request.sample, client=request.client,
-                        seq_len=getattr(request, "seq_len", None))
+                        seq_len=getattr(request, "seq_len", None),
+                        model=model)
             if slo is not None:
                 task.weight = slo.utility_weight
                 if slo.depth_cap is not None:
                     task.depth_cap = max(task.mandatory, slo.depth_cap)
                 self._slo_names[task.tid] = slo.name
+            if zm is not None and zm.weight != 1.0:
+                # model value composes multiplicatively with the SLO
+                # weight (like tenants below): the FPTAS objective sees
+                # model worth x class importance
+                task.weight = task.weight * zm.weight
             tenant = getattr(request, "tenant", None)
             rid = getattr(request, "request_id", None)
             if tenant is not None or rid is not None:
@@ -1118,7 +1236,12 @@ class Service:
         if request_id is not None:
             request.request_id = request_id
         # fail fast on what the engine thread would otherwise die on:
-        # unknown class names, and no deadline from any source
+        # unknown class names, unknown zoo models, and no deadline from
+        # any source
+        m = getattr(request, "model", None)
+        if m is not None and self.spec.models and m not in self.spec.models:
+            raise ValueError(f"unknown model {m!r}; defined: "
+                             f"{sorted(self.spec.models)}")
         cls = self.spec.slo_class(slo if slo is not None
                                   else getattr(request, "slo", None))
         if request.rel_deadline is None and \

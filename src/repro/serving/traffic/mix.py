@@ -35,7 +35,10 @@ class TrafficClass:
     ragged input length U{lo..hi} per request and stamps it into
     ``Request.seq_len`` — admission and batching then price the request
     by its length bucket (``LengthBucketTimeModel``), and same-stage
-    co-runners batch only within a bucket.
+    co-runners batch only within a bucket.  ``model`` stamps a model-zoo
+    id into ``Request.model`` — multi-model mixes route each class to its
+    own model (``repro.serving.zoo``); ``None`` keeps the single-model
+    path untouched.
     """
 
     slo: Optional[str] = None
@@ -43,6 +46,7 @@ class TrafficClass:
     rel_deadline: Optional[float] = None
     rel_range: Optional[tuple] = None
     seq_range: Optional[tuple] = None
+    model: Optional[str] = None
 
     @classmethod
     def from_dict(cls, d: dict) -> "TrafficClass":
@@ -51,7 +55,8 @@ class TrafficClass:
         return cls(slo=d.get("slo"), share=float(d.get("share", 1.0)),
                    rel_deadline=d.get("rel_deadline"),
                    rel_range=tuple(rr) if rr is not None else None,
-                   seq_range=tuple(sr) if sr is not None else None)
+                   seq_range=tuple(sr) if sr is not None else None,
+                   model=d.get("model"))
 
     def to_dict(self) -> dict:
         d = {"slo": self.slo, "share": self.share}
@@ -61,6 +66,8 @@ class TrafficClass:
             d["rel_range"] = list(self.rel_range)
         if self.seq_range is not None:
             d["seq_range"] = list(self.seq_range)
+        if self.model is not None:
+            d["model"] = self.model
         return d
 
 
@@ -98,7 +105,7 @@ class RequestMix:
         inputs = self.inputs_fn(sample) if self.inputs_fn is not None else None
         return Request(inputs=inputs, rel_deadline=rel, sample=sample,
                        client=client, arrival=float(offset), slo=c.slo,
-                       seq_len=seq_len)
+                       seq_len=seq_len, model=c.model)
 
     def stream(self, rng: np.random.Generator, offsets) -> list:
         """The full open-loop stream: [(offset, Request)] in arrival order

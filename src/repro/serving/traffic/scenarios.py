@@ -20,6 +20,9 @@ Catalog (see README for the table):
                 overload; assert on windowed metrics, not aggregates.
 ``diurnal``     sinusoidal 0.3x–1.8x ramp — rankings under a moving
                 operating point.
+``model-mix``   two-model zoo (llm + vision) at 2.0x capacity — the
+                cross-model shedding claim (``repro.serving.zoo``): each
+                class stamps a model id into ``Request.model``.
 ==============  ============================================================
 
 Every scenario shares one three-tier SLO mix (gold/silver/bronze:
@@ -48,6 +51,16 @@ SLO_CLASSES = {
 DEFAULT_MIX = ({"slo": "gold", "share": 0.2},
                {"slo": "silver", "share": 0.5},
                {"slo": "bronze", "share": 0.3})
+
+#: two-model zoo mix (``repro.serving.zoo``): an expensive high-value
+#: "llm" head and a cheap "vision" model sharing one device, split
+#: across the SLO tiers — what the ``model-mix`` scenario stamps into
+#: ``Request.model``
+MODEL_MIX = ({"slo": "gold", "share": 0.15, "model": "llm"},
+             {"slo": "silver", "share": 0.25, "model": "llm"},
+             {"slo": "gold", "share": 0.15, "model": "vision"},
+             {"slo": "silver", "share": 0.25, "model": "vision"},
+             {"slo": "bronze", "share": 0.2, "model": "vision"})
 
 
 def nominal_rate(stage_times) -> float:
@@ -93,6 +106,10 @@ SCENARIOS = {
                  "sinusoidal 0.3x-1.8x ramp, 8s period: moving load",
                  {"kind": "diurnal", "base_rate": 0.3, "peak_rate": 1.8,
                   "period": 8.0}),
+        Scenario("model-mix",
+                 "two-model zoo (llm + vision) at 2x capacity: "
+                 "cross-model shedding under mixed overload",
+                 {"kind": "poisson", "rate": 2.0}, mix=MODEL_MIX),
     )
 }
 

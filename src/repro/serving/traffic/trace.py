@@ -85,7 +85,8 @@ class TraceRecorder:
                 offset=offset, sample=int(r["sample"]),
                 client=int(r.get("client", 0)), slo=r.get("slo"),
                 rel_deadline=float(rel), outcome=outcome,
-                tenant=r.get("tenant"), request_id=r.get("request_id")))
+                tenant=r.get("tenant"), request_id=r.get("request_id"),
+                model=r.get("model")))
         return self.events
 
     def header(self) -> dict:
@@ -148,7 +149,8 @@ def arrival_signature(per_request) -> list:
     request, (offset, sample, slo, rel_deadline)."""
     recs = sorted(per_request, key=lambda r: r["tid"])
     return [(round(float(r.get("offset", r["arrival"])), 12), r["sample"],
-             r.get("slo"), r.get("rel_deadline")) for r in recs]
+             r.get("slo"), r.get("rel_deadline"), r.get("model"))
+            for r in recs]
 
 
 def admission_signature(per_request) -> list:

@@ -1,0 +1,41 @@
+"""Multi-model serving zoo: one Service, many models, cross-model
+preemption.
+
+The subsystem plugs into the runtime core entirely through the public
+extension points (the same discipline as :mod:`repro.serving.traffic`
+and :mod:`repro.launch.serve`):
+
+* :class:`ModelZoo` / :class:`ZooModel` — the registry binding each
+  model id to its WCET table, mandatory depth, utility weight and
+  confidence-vs-depth prior; declared JSON-ably in ``ServeSpec.models``.
+* :class:`ZooTimeModel` — blended worst-case ``BatchTimeModel`` with
+  per-model ``for_model`` dispatch (what the batcher, admission and
+  ``batch_wcet`` resolve).
+* ``register_policy("rtdeepiot-zoo")`` — :class:`ZooRTDeepIoT`, the
+  cross-model preemption policy (``scope="global"`` plans all models
+  jointly; ``"siloed"`` is the per-model ablation baseline).
+* ``register_executor("zoo-oracle")`` — per-model oracle tables on one
+  virtual device; ``"zoo-device"`` (jax; registered from
+  :mod:`repro.launch.serve`) routes real batched stage fns per model.
+* :class:`ZooAdmissionController` — admission priced per request against
+  its own model's tables.
+
+Importing this package performs the numpy-only registrations; the
+package itself is imported from :mod:`repro.serving`.
+"""
+from repro.serving.zoo.admission import ZooAdmissionController
+from repro.serving.zoo.executor import (ZooOracleExecutor,
+                                        ZooTableRecorder)
+from repro.serving.zoo.models import (ZOO_MODEL_KEYS, ModelZoo,
+                                      ZooModel, ZooTimeModel,
+                                      validate_models)
+from repro.serving.zoo.policy import (ZooPredictor, ZooRTDeepIoT,
+                                      make_zoo_predictor,
+                                      zoo_from_context)
+
+__all__ = [
+    "ZOO_MODEL_KEYS", "ModelZoo", "ZooAdmissionController", "ZooModel",
+    "ZooOracleExecutor", "ZooPredictor", "ZooRTDeepIoT",
+    "ZooTableRecorder", "ZooTimeModel", "make_zoo_predictor",
+    "validate_models", "zoo_from_context",
+]

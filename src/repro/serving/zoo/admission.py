@@ -1,0 +1,28 @@
+"""Zoo-aware admission control: each request priced by its own model.
+
+The base :class:`~repro.serving.batch.admission.AdmissionController`
+prices every request and every backlog entry with one shared WCET table.
+In a zoo that is doubly wrong: a cheap vision request would be rejected
+because the blended (worst-case) table prices it like the LLM, and the
+optimistic backlog would overstate what the queue actually owes.  This
+controller resolves the per-model table through the blended
+:class:`~repro.serving.zoo.models.ZooTimeModel`'s ``for_model`` for both
+sides of the decision — its own mandatory cost, its feasible depth, and
+each active task's amortized backlog contribution.  Tasks without a
+model id (or a non-zoo time model) fall back to the shared table, so
+single-model services decide identically.
+"""
+from __future__ import annotations
+
+from repro.serving.batch.admission import AdmissionController
+
+
+class ZooAdmissionController(AdmissionController):
+    """`AdmissionController` with per-model WCET resolution."""
+
+    def _tm_for(self, task):
+        m = getattr(task, "model", None)
+        if m is None:
+            return self.time_model
+        fm = getattr(self.time_model, "for_model", None)
+        return self.time_model if fm is None else fm(m)

@@ -1,0 +1,92 @@
+"""Multi-model device executor: one accelerator, per-model stage fns.
+
+``register_executor("zoo-device")`` (registered from
+:mod:`repro.launch.serve`, next to the other jax-heavy executors) runs a
+:class:`~repro.serving.runtime.device.DeviceExecutor` whose stage
+dispatch routes on the batch's model id: the
+:class:`~repro.serving.batch.batcher.StageBatcher` only seats same-model
+co-runners, so every window is exactly one model's batched stage fn over
+one shared bucket set.  The hidden-state cache, commit slicing, inflight
+FIFO and telemetry are all inherited unchanged — state rows are per
+request and never cross models.
+
+This module imports jax (via the device executor); keep imports lazy on
+numpy-only paths.
+"""
+from __future__ import annotations
+
+from repro.serving.registry import BuildContext
+from repro.serving.runtime.device import DeviceExecutor
+from repro.serving.zoo.policy import zoo_from_context
+
+
+class ZooDeviceExecutor(DeviceExecutor):
+    """``DeviceExecutor`` routing each window to its model's stage fns.
+
+    ``fns_by_model``/``params_by_model``: ``{model: BatchedStageFns}`` /
+    ``{model: params}``.  The inherited ``stage_fns``/``params`` (may be
+    ``None``) serve windows whose tasks carry no model id.
+    """
+
+    def __init__(self, fns_by_model: dict, params_by_model: dict,
+                 time_model, *, stage_fns=None, params=None,
+                 max_inflight: int = 1):
+        super().__init__(stage_fns, params, time_model,
+                         max_inflight=max_inflight)
+        self.fns_by_model = dict(fns_by_model)
+        self.params_by_model = dict(params_by_model)
+
+    def _dispatch_stage(self, stage: int, tasks: list):
+        m = getattr(tasks[0], "model", None)
+        if m is None:
+            if self.stage_fns is None:
+                raise KeyError("window carries no model id and the zoo "
+                               "device executor has no default stage fns")
+            return super()._dispatch_stage(stage, tasks)
+        try:
+            fns, params = self.fns_by_model[m], self.params_by_model[m]
+        except KeyError:
+            raise KeyError(f"no stage fns for zoo model {m!r}; have: "
+                           f"{sorted(self.fns_by_model)}") from None
+        hs = [self.states[t.tid][1] for t in tasks]
+        h_out, logits, conf, _mask = fns.run(stage, params, hs)
+        return h_out, logits, conf
+
+
+def build_zoo_device_executor(args: dict, ctx: BuildContext):
+    """Factory behind ``executor="zoo-device"``.
+
+    resources: ``zoo_models`` = ``{model: {"cfg": AnytimeConfig,
+    "params": params, "stage_fns": BatchedStageFns (optional)}}``;
+    optional ``cfg``/``params``/``stage_fns`` for model-less requests.
+    """
+    from repro.serving.batch.stage_fns import BatchedStageFns
+    zoo = zoo_from_context(ctx)
+    zres = ctx.resources.get("zoo_models")
+    if zres is None:
+        raise KeyError("executor='zoo-device' needs a 'zoo_models' "
+                       "resource: {model: {'cfg': ..., 'params': ...}}")
+    missing = [m for m in zoo.names() if m not in zres]
+    if missing:
+        raise KeyError(f"zoo_models missing models {missing}")
+    buckets = ctx.time_model.buckets
+    fns, params = {}, {}
+    for m, entry in zres.items():
+        sfns = entry.get("stage_fns")
+        if sfns is None:
+            sfns = BatchedStageFns(entry["cfg"], buckets)
+        fns[m], params[m] = sfns, entry["params"]
+    base_fns = ctx.resources.get("stage_fns")
+    base_cfg = ctx.resources.get("cfg")
+    if base_fns is None and base_cfg is not None:
+        base_fns = BatchedStageFns(base_cfg, buckets)
+    ex = ZooDeviceExecutor(
+        fns, params, ctx.time_model,
+        stage_fns=base_fns, params=ctx.resources.get("params"),
+        max_inflight=max(1, int(ctx.spec.pipeline_depth) - 1))
+
+    def warmup(sample_input):
+        for m in sorted(fns):
+            fns[m].warmup(params[m], sample_input)
+    ex.warmup = warmup
+    return ex

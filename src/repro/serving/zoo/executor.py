@@ -1,0 +1,107 @@
+"""Zoo oracle executor: one virtual device, per-model oracle tables.
+
+``register_executor("zoo-oracle")`` — the discrete-event device model for
+a multi-model service.  Batch *pricing* needs no override at all:
+:meth:`~repro.serving.runtime.executor.OracleExecutor.submit` prices
+through :func:`~repro.serving.batch.time_model.batch_wcet`, which
+resolves the batch's model against the blended
+:class:`~repro.serving.zoo.models.ZooTimeModel` (the ``for_model``
+dispatch).  What does need dispatch is *measurement*: each model has its
+own per-sample confidence oracle, read from the ``zoo_tables`` resource
+(``{model: {"conf": (n_samples, L), "correct": (n_samples, L)}}``).
+
+:class:`ZooTableRecorder` is the matching aggregation: the golden-parity
+``TableRecorder`` math with correctness/confidence looked up in the
+retiring task's own model tables.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.registry import BuildContext, register_executor
+from repro.serving.runtime.core import TableRecorder
+from repro.serving.runtime.executor import OracleExecutor
+from repro.serving.zoo.policy import zoo_from_context
+
+
+class ZooOracleExecutor(OracleExecutor):
+    """``OracleExecutor`` with per-model confidence tables.
+
+    ``conf_tables``: ``{model: (n_samples, L) array}``; ``conf_table``
+    (the inherited single table, may be ``None``) serves tasks without a
+    model id.
+    """
+
+    def __init__(self, time_model, conf_tables: dict, *,
+                 conf_table=None, max_inflight: int = 1):
+        super().__init__(time_model, conf_table, max_inflight=max_inflight)
+        self.conf_tables = dict(conf_tables)
+
+    def _table(self, task):
+        m = getattr(task, "model", None)
+        if m is None:
+            if self.conf_table is None:
+                raise KeyError("task carries no model id and the zoo "
+                               "executor has no default conf_table")
+            return self.conf_table
+        try:
+            return self.conf_tables[m]
+        except KeyError:
+            raise KeyError(f"no oracle table for zoo model {m!r}; have: "
+                           f"{sorted(self.conf_tables)}") from None
+
+    def commit(self, task, k: int) -> float:
+        return float(self._table(task)[task.sample, task.executed - 1])
+
+
+class ZooTableRecorder(TableRecorder):
+    """``TableRecorder`` resolving (conf, correct) per retiring model."""
+
+    def __init__(self, conf_tables: dict, correct_tables: dict,
+                 conf_table=None, correct_table=None):
+        super().__init__(conf_table, correct_table)
+        self.conf_tables = dict(conf_tables)
+        self.correct_tables = dict(correct_tables)
+
+    def _tables(self, task):
+        m = getattr(task, "model", None)
+        if m is None:
+            return self.conf_table, self.correct_table
+        return self.conf_tables[m], self.correct_tables[m]
+
+    def on_retire(self, task, now: float, rejected: bool = False) -> None:
+        conf_t, correct_t = self._tables(task)
+        depth = task.executed
+        missed = depth == 0
+        correct = (not missed) and bool(correct_t[task.sample, depth - 1])
+        conf = float(conf_t[task.sample, depth - 1]) if depth else 0.0
+        self.finished.append(dict(
+            tid=task.tid, missed=missed, correct=correct, depth=depth,
+            conf=conf, client=task.client, sample=task.sample,
+            deadline=task.deadline, arrival=task.arrival,
+            rejected=rejected))
+
+
+def zoo_tables_from(ctx: BuildContext) -> dict:
+    """The ``zoo_tables`` resource, keys validated against the zoo."""
+    tabs = ctx.resources.get("zoo_tables")
+    if tabs is None:
+        raise KeyError("executor='zoo-oracle' needs a 'zoo_tables' "
+                       "resource: {model: {'conf': ..., 'correct': ...}}")
+    return {m: {k: np.asarray(v) for k, v in d.items()}
+            for m, d in tabs.items()}
+
+
+@register_executor("zoo-oracle")
+def _make_zoo_oracle(args: dict, ctx: BuildContext):
+    """resources: ``zoo_tables`` (per-model oracle tables); optional
+    ``conf_table``/``correct_table`` for model-less requests."""
+    zoo = zoo_from_context(ctx)
+    tabs = zoo_tables_from(ctx)
+    missing = [m for m in zoo.names() if m not in tabs]
+    if missing:
+        raise KeyError(f"zoo_tables missing models {missing}")
+    return ZooOracleExecutor(
+        ctx.time_model, {m: d["conf"] for m, d in tabs.items()},
+        conf_table=ctx.resources.get("conf_table"),
+        max_inflight=max(1, int(ctx.spec.pipeline_depth) - 1))

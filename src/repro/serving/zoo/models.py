@@ -1,0 +1,212 @@
+"""Model registry for multi-model serving: ids -> tables and defaults.
+
+One zoo = one device serving N anytime models.  Each :class:`ZooModel`
+binds a model id to the things the scheduler prices and plans with:
+
+* a per-model WCET table (:class:`~repro.serving.batch.batcher
+  .BatchTimeModel`, optionally length-bucketed) — stage costs differ per
+  model, so feasibility and batch pricing must too;
+* the model's mandatory depth and a utility *weight* (how much one unit
+  of this model's confidence is worth relative to the others — what the
+  cross-model FPTAS trades off under overload);
+* an optional confidence-vs-depth prior curve (``utility``) seeding the
+  §II-D predictor for requests that have not executed a stage yet.
+
+The :class:`ModelZoo` validates the set and exposes one
+:class:`ZooTimeModel` — a blended worst-case ``BatchTimeModel`` over the
+member tables that model-blind consumers (the §II-B deadline adjustment,
+engine overlap accounting) price conservatively, with a ``for_model``
+method that model-aware consumers (the
+:class:`~repro.serving.batch.batcher.StageBatcher`,
+:func:`~repro.serving.batch.time_model.batch_wcet`, admission) resolve to
+the exact per-model table.  All batch buckets must match across models:
+the device pre-compiles one shared bucket set, so a batch of n costs one
+bucket no matter whose model fills it.
+
+No jax import — the discrete-event stack builds zoos too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.batch.batcher import DEFAULT_BUCKETS, BatchTimeModel
+from repro.serving.batch.time_model import LengthBucketTimeModel
+
+# the JSON-able per-model config keys ``ServeSpec.models`` accepts
+ZOO_MODEL_KEYS = ("stage_times", "marginal", "buckets", "times",
+                  "len_buckets", "len_marginal", "mandatory", "weight",
+                  "utility")
+
+
+@dataclasses.dataclass(frozen=True)
+class ZooModel:
+    """One model's serving contract inside a zoo."""
+    name: str
+    time_model: BatchTimeModel
+    mandatory: int = 1
+    weight: float = 1.0
+    utility: Optional[tuple] = None    # prior confidence-vs-depth curve
+
+    @property
+    def num_stages(self) -> int:
+        return self.time_model.num_stages
+
+
+@dataclasses.dataclass(frozen=True)
+class ZooTimeModel(BatchTimeModel):
+    """Blended worst-case WCET table over a zoo's per-model tables.
+
+    The inherited 2-D ``times`` is the per-(bucket, stage) max across
+    models (stages a model lacks contribute nothing), so model-blind
+    pricing stays conservative; ``for_model`` dispatches to the exact
+    per-model table for the consumers that know whose batch they price.
+    With a single member the blend *is* that member's table — the parity
+    guarantee single-model zoo specs rely on.
+    """
+    models: dict = dataclasses.field(default_factory=dict)
+
+    def for_model(self, model: str) -> BatchTimeModel:
+        try:
+            return self.models[model]
+        except KeyError:
+            raise KeyError(f"unknown zoo model {model!r}; defined: "
+                           f"{sorted(self.models)}") from None
+
+    @classmethod
+    def blend(cls, models: dict) -> "ZooTimeModel":
+        """Build the blend from ``{name: BatchTimeModel}`` (all members
+        must share one batch-bucket set)."""
+        if not models:
+            raise ValueError("a zoo needs at least one model")
+        tms = list(models.values())
+        buckets = tms[0].buckets
+        for name, tm in models.items():
+            if tm.buckets != buckets:
+                raise ValueError(
+                    f"zoo models must share batch buckets: {name!r} has "
+                    f"{tm.buckets}, expected {buckets}")
+        num_stages = max(tm.num_stages for tm in tms)
+        rows = tuple(
+            tuple(max(tm.times[bi][s] for tm in tms if s < tm.num_stages)
+                  for s in range(num_stages))
+            for bi in range(len(buckets)))
+        return cls(buckets=buckets, times=rows, models=dict(models))
+
+
+class ModelZoo:
+    """The validated model set one Service serves (``ServeSpec.models``).
+
+    ``models``: ``{name: ZooModel}``.  ``time_model`` is the blended
+    :class:`ZooTimeModel` the build threads through batcher, admission
+    and deadline adjustment.
+    """
+
+    def __init__(self, models: dict):
+        if not models:
+            raise ValueError("a ModelZoo needs at least one model")
+        self.models = dict(models)
+        self.time_model = ZooTimeModel.blend(
+            {name: zm.time_model for name, zm in self.models.items()})
+
+    def __contains__(self, name) -> bool:
+        return name in self.models
+
+    def names(self) -> list:
+        return sorted(self.models)
+
+    def model(self, name: str) -> ZooModel:
+        try:
+            return self.models[name]
+        except KeyError:
+            raise KeyError(f"unknown zoo model {name!r}; defined: "
+                           f"{self.names()}") from None
+
+    @classmethod
+    def from_spec(cls, spec_models: dict) -> "ModelZoo":
+        """Build from the JSON-able ``ServeSpec.models`` mapping (see
+        :data:`ZOO_MODEL_KEYS`; format mirrors ``ServeSpec.batching``)."""
+        validate_models(spec_models)
+        out = {}
+        for name, cfg in spec_models.items():
+            out[name] = ZooModel(
+                name=name, time_model=_time_model_from(name, cfg),
+                mandatory=int(cfg.get("mandatory", 1)),
+                weight=float(cfg.get("weight", 1.0)),
+                utility=(tuple(float(u) for u in cfg["utility"])
+                         if cfg.get("utility") is not None else None))
+        return cls(out)
+
+
+def _time_model_from(name: str, cfg: dict) -> BatchTimeModel:
+    buckets = tuple(int(b) for b in cfg.get("buckets", DEFAULT_BUCKETS))
+    if cfg.get("times") is not None:
+        return BatchTimeModel(
+            buckets=buckets,
+            times=tuple(tuple(float(t) for t in row)
+                        for row in cfg["times"]))
+    stage_times = tuple(float(t) for t in cfg["stage_times"])
+    marginal = float(cfg.get("marginal", 0.15))
+    if cfg.get("len_buckets") is not None:
+        return LengthBucketTimeModel.linear(
+            stage_times, buckets=buckets, marginal=marginal,
+            len_buckets=tuple(int(b) for b in cfg["len_buckets"]),
+            len_marginal=cfg.get("len_marginal"))
+    return BatchTimeModel.linear(stage_times, buckets=buckets,
+                                 marginal=marginal)
+
+
+def validate_models(spec_models: dict) -> None:
+    """Shape-level checks for ``ServeSpec.models`` — fail at spec time,
+    not at first dispatch (the ``_validate_sharded_args`` discipline)."""
+    if not isinstance(spec_models, dict):
+        raise ValueError("ServeSpec.models must be a dict of model configs")
+    shared = None
+    for name, cfg in spec_models.items():
+        if not isinstance(cfg, dict):
+            raise ValueError(f"model {name!r}: config must be a dict")
+        unknown = set(cfg) - set(ZOO_MODEL_KEYS)
+        if unknown:
+            raise ValueError(f"model {name!r}: unknown keys "
+                             f"{sorted(unknown)}; known: "
+                             f"{sorted(ZOO_MODEL_KEYS)}")
+        if cfg.get("times") is None and cfg.get("stage_times") is None:
+            raise ValueError(f"model {name!r}: needs 'stage_times' or "
+                             "explicit 'times' rows")
+        sts = cfg.get("stage_times")
+        if sts is not None and (not sts
+                                or any(float(t) <= 0 for t in sts)):
+            raise ValueError(f"model {name!r}: stage_times must be a "
+                             "non-empty list of positive seconds")
+        buckets = tuple(int(b) for b in cfg.get("buckets", DEFAULT_BUCKETS))
+        if list(buckets) != sorted(set(buckets)) or buckets[0] < 1:
+            raise ValueError(f"model {name!r}: buckets must be strictly "
+                             f"ascending integers >= 1, got {buckets}")
+        if cfg.get("times") is not None \
+                and len(cfg["times"]) != len(buckets):
+            raise ValueError(f"model {name!r}: one 'times' row per bucket "
+                             "required")
+        if shared is None:
+            shared = buckets
+        elif buckets != shared:
+            raise ValueError(f"model {name!r}: batch buckets {buckets} "
+                             f"differ from the zoo's {shared} (the device "
+                             "pre-compiles one shared bucket set)")
+        mand = cfg.get("mandatory", 1)
+        if isinstance(mand, bool) or not isinstance(mand, int) or mand < 1:
+            raise ValueError(f"model {name!r}: mandatory must be an "
+                             f"integer >= 1, got {mand!r}")
+        if sts is not None and mand > len(sts):
+            raise ValueError(f"model {name!r}: mandatory {mand} exceeds "
+                             f"the model's {len(sts)} stages")
+        if float(cfg.get("weight", 1.0)) <= 0:
+            raise ValueError(f"model {name!r}: weight must be > 0")
+        util = cfg.get("utility")
+        if util is not None and (not util or any(
+                not 0.0 <= float(u) <= 1.0 for u in util)):
+            raise ValueError(f"model {name!r}: utility must be a non-empty "
+                             "list of confidences in [0, 1]")
+        lm = cfg.get("len_marginal")
+        if lm is not None and not 0 <= float(lm) <= 1:
+            raise ValueError(f"model {name!r}: len_marginal must be in "
+                             "[0, 1]")

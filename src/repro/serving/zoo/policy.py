@@ -1,0 +1,173 @@
+"""Cross-model preemption: the paper's scheduler lifted over a model zoo.
+
+``register_policy("rtdeepiot-zoo")`` — :class:`ZooRTDeepIoT` extends the
+SLO-weighted scheduler with per-model utility prediction
+(:class:`ZooPredictor`: each model's own confidence-vs-depth curve) and a
+``scope`` knob that *is* the cross-model preemption policy:
+
+* ``scope="global"`` (default) — one FPTAS plan over the whole active
+  set, every model's depth options priced by its own stage costs and
+  weighted by ``model weight x SLO weight``.  Under mixed-model overload
+  the planner sheds the globally least-valuable *optional* stages first,
+  whichever model they belong to — a cheap low-utility vision stage loses
+  its seat to an expensive high-utility LLM stage and vice versa.  The
+  §II-E greedy swap likewise trades depth across models.
+* ``scope="siloed"`` — the ablation baseline: the active set is
+  partitioned by model and each partition planned *independently against
+  the full device*.  Every silo believes it owns the machine, so under
+  mixed overload the union plan overcommits and admitted work misses —
+  exactly what the zoo benchmark quantifies against ``"global"``.
+
+Tasks without a model id ride the base predictor and (under
+``"siloed"``) their own ``None`` partition, so single-model services are
+bit-for-bit unchanged.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dp import DepthPlanner
+from repro.core.greedy import greedy_update
+from repro.core.schedulers import WeightedRTDeepIoT
+from repro.core.utility import UtilityPredictor, make_predictor
+from repro.serving.registry import BuildContext, register_policy
+from repro.serving.zoo.models import ModelZoo
+
+SCOPES = ("global", "siloed")
+
+
+class ZooPredictor(UtilityPredictor):
+    """Per-model §II-D utility prediction behind one predictor surface.
+
+    Dispatches ``seed``/``predict`` on ``task.model``: each model gets a
+    predictor seeded from its own prior curve (or oracle table); tasks
+    without a model fall through to ``base``.
+    """
+    name = "zoo"
+
+    def __init__(self, base: UtilityPredictor, per_model: dict):
+        super().__init__(base.prior)
+        self.base = base
+        self.per_model = dict(per_model)
+        self.name = f"zoo-{base.name}"
+
+    def _for(self, task) -> UtilityPredictor:
+        m = getattr(task, "model", None)
+        if m is None:
+            return self.base
+        return self.per_model.get(m, self.base)
+
+    def seed(self, task) -> float:
+        return self._for(task).seed(task)
+
+    def predict(self, task, depth: int) -> float:
+        return self._for(task).predict(task, depth)
+
+
+class ZooRTDeepIoT(WeightedRTDeepIoT):
+    """See module docstring; ``scope`` picks global vs siloed planning."""
+
+    def __init__(self, predictor, delta: float = 0.1,
+                 scope: str = "global"):
+        super().__init__(predictor, delta=delta)
+        if scope not in SCOPES:
+            raise ValueError(f"scope must be one of {SCOPES}, got {scope!r}")
+        self.scope = scope
+        self.delta = delta
+        self._planners: dict = {}      # model -> DepthPlanner (siloed)
+        self.name = f"rtdeepiot-zoo-{scope}-{predictor.name}"
+
+    # -- siloed scope: per-model planning ------------------------------
+    def _replan(self, active, now):
+        if self.scope == "global":
+            return super()._replan(active, now)
+        t0 = time.perf_counter()
+        groups: dict = {}
+        for t in active:
+            groups.setdefault(getattr(t, "model", None), []).append(t)
+        for m, group in groups.items():
+            planner = self._planners.setdefault(
+                m, DepthPlanner(delta=self.delta))
+            assignment = planner.plan(group, now, self.predictor)
+            for t in group:
+                t.assigned_depth = max(
+                    t.clamp_depth(assignment.get(t.tid, t.executed)),
+                    t.executed)
+        self.sched_time += time.perf_counter() - t0
+        self.invocations += 1
+
+    def on_stage_done(self, active, task, now):
+        if self.scope == "global":
+            return super().on_stage_done(active, task, now)
+        t0 = time.perf_counter()
+        m = getattr(task, "model", None)
+        others = [t for t in active
+                  if t.tid != task.tid and t.deadline > now
+                  and getattr(t, "model", None) == m]
+        greedy_update(task, others, self.predictor)
+        for t in (task, *others):
+            t.assigned_depth = max(t.clamp_depth(t.assigned_depth),
+                                   t.executed)
+        self.sched_time += time.perf_counter() - t0
+        self.invocations += 1
+
+
+def make_zoo_predictor(args: dict, ctx: BuildContext,
+                       zoo: ModelZoo) -> ZooPredictor:
+    """Per-model predictors from (in precedence order) the model's
+    ``utility`` prior, its ``zoo_tables`` confidence means, or the shared
+    prior; ``predictor="oracle"`` reads each model's own table."""
+    name = args.get("predictor", "exp")
+    ztabs = ctx.resources.get("zoo_tables") or {}
+    per = {}
+    for mname, zm in zoo.models.items():
+        if name == "oracle":
+            try:
+                table = ztabs[mname]["conf"]
+            except KeyError:
+                raise KeyError(
+                    f"predictor='oracle' needs zoo_tables[{mname!r}]"
+                    "['conf']") from None
+            per[mname] = make_predictor("oracle",
+                                        oracle_table=np.asarray(table))
+            continue
+        prior = zm.utility
+        if prior is None and mname in ztabs:
+            prior = np.asarray(ztabs[mname]["conf"]).mean(0)
+        if prior is None:
+            prior = args.get("prior_curve")
+        per[mname] = make_predictor(name, prior_curve=prior)
+    conf = ctx.resources.get("conf_table")
+    if name == "oracle":
+        base = make_predictor("oracle", oracle_table=conf) \
+            if conf is not None else next(iter(per.values()))
+    else:
+        prior = args.get("prior_curve")
+        if prior is None and conf is not None:
+            prior = conf.mean(0)
+        base = make_predictor(name, prior_curve=prior)
+    return ZooPredictor(base, per)
+
+
+def zoo_from_context(ctx: BuildContext) -> ModelZoo:
+    """The build's zoo: the ``zoo`` resource if supplied, else built from
+    ``spec.models``."""
+    zoo = ctx.resources.get("zoo")
+    if zoo is not None:
+        return zoo
+    if not ctx.spec.models:
+        raise ValueError("a zoo component needs ServeSpec.models (or a "
+                         "'zoo' resource)")
+    return ModelZoo.from_spec(ctx.spec.models)
+
+
+@register_policy("rtdeepiot-zoo")
+def _make_rtdeepiot_zoo(args: dict, ctx: BuildContext):
+    """args: ``scope`` ("global"/"siloed"), plus the ``rtdeepiot`` args
+    (``predictor``, ``prior_curve``, ``delta``)."""
+    zoo = zoo_from_context(ctx)
+    pred = make_zoo_predictor(args, ctx, zoo)
+    return ZooRTDeepIoT(pred, delta=float(args.get("delta", 0.1)),
+                        scope=args.get("scope", "global"))

@@ -111,6 +111,39 @@ def test_batcher_growth_respects_bucket_jump():
     assert tight in batch and len(batch) == 2
 
 
+def test_batcher_dp2_defers_tail_to_dp_multiple():
+    """dp-aware formation (sharded seating): a fill that would round up
+    to the next bucket trims back to the largest dp multiple when that
+    lowers the priced bucket; otherwise the batch is left alone."""
+    tm = BatchTimeModel.linear((0.010,), (1, 2, 4, 8), marginal=0.1)
+    now = 0.0
+    loose = lambda: mk_task(1.0, times=(0.010,))
+    # n=5 prices at bucket 8; deferring one task to n=4 prices at bucket 4
+    batch = StageBatcher(tm, dp=2).form(loose(), [loose() for _ in range(4)],
+                                        now)
+    assert len(batch) == 4
+    # n=7 -> bucket 8, and n=6 still prices at bucket 8: no gain, no trim
+    batch = StageBatcher(tm, dp=2).form(loose(), [loose() for _ in range(6)],
+                                        now)
+    assert len(batch) == 7
+    # n=3 -> bucket 4; n=2 prices at bucket 2: defer one
+    batch = StageBatcher(tm, dp=2).form(loose(), [loose() for _ in range(2)],
+                                        now)
+    assert len(batch) == 2
+    # exact bucket hit (n=4, dp=3): no padding rows exist, so no trim
+    batch = StageBatcher(tm, dp=3).form(loose(), [loose() for _ in range(3)],
+                                        now)
+    assert len(batch) == 4
+    # the leader is never deferred even when n < dp
+    batch = StageBatcher(tm, dp=4).form(loose(), [loose() for _ in range(2)],
+                                        now)
+    assert len(batch) == 3
+    # dp=1 is the identity: the same fill keeps all 5 members
+    batch = StageBatcher(tm, dp=1).form(loose(), [loose() for _ in range(4)],
+                                        now)
+    assert len(batch) == 5
+
+
 def test_infeasible_leader_runs_solo():
     tm = BatchTimeModel.linear((0.010,), (1, 2), marginal=0.5)
     batcher = StageBatcher(tm)

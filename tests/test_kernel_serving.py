@@ -451,6 +451,25 @@ def test_service_metrics_surface_device_telemetry(tiny_model):
     assert res2.executor_times == {} and res2.executor_cache == {}
 
 
+def test_executor_telemetry_fresh_across_repeated_runs(tiny_model):
+    """The virtual clock never hides device telemetry (host/device time
+    is wall-measured), and each run() on one Service rebuilds the
+    executor — per-run cache stats never accumulate across runs."""
+    cfg, params = tiny_model
+    svc = Service.from_spec(_stream_spec("device-batched", {}), cfg=cfg,
+                            params=params)
+    res1 = svc.run(_classifier_stream(cfg, n_requests=6))
+    res2 = svc.run(_classifier_stream(cfg, n_requests=4))
+    for res, n in ((res1, 6), (res2, 4)):
+        assert res.n_requests == n
+        assert res.executor_times["host_time"] > 0
+        assert res.executor_times["device_time"] > 0
+        assert len(res.executor_times["stage_host_time"]) >= 1
+        # every request's hidden state was cached and evicted this run
+        assert res.executor_cache["live"] == 0
+        assert res.executor_cache["evictions"] == n
+
+
 def test_device_kernel_refines_time_model_with_len_buckets(tiny_model):
     cfg, params = tiny_model
     svc = Service.from_spec(

@@ -83,6 +83,25 @@ def test_record_event_serializes_as_version1():
     assert Record.from_dict(d).kind == "EVENT"
 
 
+def test_record_model_field_roundtrips_and_stays_v1_compatible():
+    """The model-zoo id follows the emit-only-when-set rule: a record
+    carrying one round-trips it exactly, a record without one serializes
+    byte-identically to the pre-zoo schema and reads back as None."""
+    r = Record(offset=0.75, sample=4, kind="SUBMIT", request_id="r-9",
+               model="llm")
+    d = json.loads(r.to_json())
+    assert d["model"] == "llm"
+    back = Record.from_dict(d)
+    assert back == r and back.request().model == "llm"
+    plain = Record(offset=0.75, sample=4, kind="SUBMIT", request_id="r-9")
+    dp = json.loads(plain.to_json())
+    assert "model" not in dp                    # v2-without-model byte compat
+    assert Record.from_dict(dp).model is None
+    v1 = Record(offset=0.5, sample=3, client=1, slo="gold", rel_deadline=0.2)
+    assert v1.to_json() == json.dumps(dict(
+        offset=0.5, sample=3, client=1, slo="gold", rel_deadline=0.2))
+
+
 def test_record_request_carries_plane_fields():
     r = Record(offset=2.0, sample=5, slo="gold", rel_deadline=0.3,
                kind="SUBMIT", tenant="t0", request_id="rid-5")

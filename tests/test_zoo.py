@@ -1,0 +1,319 @@
+"""Tests for the multi-model serving zoo (repro.serving.zoo).
+
+Contracts held here:
+
+* ``validate_models`` rejects malformed ``ServeSpec.models`` at spec
+  time (unknown keys, non-positive costs, mismatched bucket sets, ...).
+* The blended ``ZooTimeModel`` is the per-(bucket, stage) worst case
+  over the member tables, ``for_model`` resolves the exact table, and a
+  single-member blend *is* the member — the parity guarantee.
+* The ``StageBatcher`` seats same-model co-runners only and prices the
+  batch with the leader's model table, not the blend.
+* ``ZooAdmissionController`` prices each request by its own model, so a
+  cheap model is admitted where the blended worst case would reject it.
+* ``rtdeepiot-zoo``: ``scope`` is validated, ``"siloed"`` plans each
+  model partition with its own ``DepthPlanner``, and end to end under
+  the ``model-mix`` overload scenario global cross-model shedding is at
+  least as good as siloed planning on weighted admitted accuracy.
+* A single-member zoo spec reproduces the plain oracle path bit for bit.
+* ``Service.submit`` fails fast on a model id the zoo does not define.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import Task, make_predictor
+from repro.serving import (ModelZoo, ServeSpec, Service,
+                           ZooAdmissionController, ZooRTDeepIoT)
+from repro.serving.batch import AdmissionController
+from repro.serving.batch.batcher import StageBatcher
+from repro.serving.engine import Request
+from repro.serving.traffic import scenario_spec
+from repro.serving.zoo import validate_models
+
+LLM_TIMES = (0.006, 0.010, 0.014)
+VISION_TIMES = (0.003, 0.005, 0.007)
+ZOO = {
+    "llm": {"stage_times": list(LLM_TIMES), "weight": 2.0},
+    "vision": {"stage_times": list(VISION_TIMES)},
+}
+#: the model-mix scenario's capacity anchor (0.4 llm / 0.6 vision)
+MIX_STAGE_TIMES = tuple(0.4 * a + 0.6 * b
+                        for a, b in zip(LLM_TIMES, VISION_TIMES))
+PRIOR = [0.5, 0.7, 0.85]
+
+
+def mk_task(deadline, times, model=None, mandatory=1, now=0.0):
+    t = Task(arrival=now, deadline=deadline, stage_times=tuple(times),
+             mandatory=mandatory, model=model)
+    t.assigned_depth = t.num_stages
+    return t
+
+
+def zoo_tables(models=("llm", "vision"), n=240, L=3, seed=0):
+    out = {}
+    for i, model in enumerate(sorted(models)):
+        rng = np.random.default_rng(seed + i)
+        conf = np.sort(rng.uniform(0.3, 1.0, (n, L)), axis=1)
+        out[model] = {"conf": conf,
+                      "correct": rng.uniform(size=(n, L)) < conf}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# spec-time validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("models,match", [
+    ({"a": [0.01]}, "must be a dict"),
+    ({"a": {"stage_times": [0.01], "wieght": 2.0}}, "unknown keys"),
+    ({"a": {"weight": 1.0}}, "stage_times"),
+    ({"a": {"stage_times": []}}, "positive"),
+    ({"a": {"stage_times": [0.01, 0.0]}}, "positive"),
+    ({"a": {"stage_times": [0.01], "buckets": [2, 1]}}, "ascending"),
+    ({"a": {"times": [[0.01]], "buckets": [1, 2]}}, "row per bucket"),
+    ({"a": {"stage_times": [0.01], "buckets": [1, 2]},
+      "b": {"stage_times": [0.01], "buckets": [1, 4]}},
+     "differ from the zoo's"),
+    ({"a": {"stage_times": [0.01, 0.02], "mandatory": 3}}, "exceeds"),
+    ({"a": {"stage_times": [0.01], "mandatory": 0}}, "integer >= 1"),
+    ({"a": {"stage_times": [0.01], "weight": 0.0}}, "weight must be > 0"),
+    ({"a": {"stage_times": [0.01], "utility": [1.5]}}, r"\[0, 1\]"),
+    ({"a": {"stage_times": [0.01], "len_buckets": [16],
+            "len_marginal": 2.0}}, "len_marginal"),
+])
+def test_validate_models_rejects_malformed(models, match):
+    with pytest.raises(ValueError, match=match):
+        validate_models(models)
+
+
+def test_validate_models_accepts_the_reference_zoo():
+    validate_models(ZOO)                       # no raise
+    with pytest.raises(ValueError, match="at least one model"):
+        ModelZoo.from_spec({})
+
+
+# ---------------------------------------------------------------------------
+# ZooTimeModel: blend + for_model dispatch
+# ---------------------------------------------------------------------------
+
+def test_blend_is_per_bucket_stage_worst_case():
+    zoo = ModelZoo.from_spec(ZOO)
+    tm = zoo.time_model
+    llm, vis = tm.for_model("llm"), tm.for_model("vision")
+    for b in tm.buckets:
+        for s in range(tm.num_stages):
+            assert tm.wcet(s, b) == max(llm.wcet(s, b), vis.wcet(s, b))
+            # llm dominates vision stage-for-stage, so the blend IS llm
+            assert tm.wcet(s, b) == llm.wcet(s, b)
+    assert vis.wcet(0, 1) == VISION_TIMES[0]
+    with pytest.raises(KeyError, match="unknown zoo model"):
+        tm.for_model("nope")
+    with pytest.raises(KeyError, match="unknown zoo model"):
+        zoo.model("nope")
+
+
+def test_single_member_blend_is_the_member():
+    zoo = ModelZoo.from_spec(
+        {"m": {"stage_times": list(LLM_TIMES), "buckets": [1, 2, 4],
+               "marginal": 0.25}})
+    tm = zoo.time_model
+    member = tm.for_model("m")
+    assert tm.buckets == member.buckets
+    assert tm.times == member.times
+
+
+def test_blend_spans_models_with_different_depths():
+    zoo = ModelZoo.from_spec(
+        {"short": {"stage_times": [0.010, 0.020]},
+         "deep": {"stage_times": [0.004, 0.005, 0.006]}})
+    tm = zoo.time_model
+    assert tm.num_stages == 3
+    # stage 2 exists only in "deep": the blend carries its row unmaxed
+    assert tm.wcet(2, 1) == tm.for_model("deep").wcet(2, 1)
+    assert tm.wcet(0, 1) == 0.010
+
+
+# ---------------------------------------------------------------------------
+# StageBatcher: model-aware seating + leader-model pricing
+# ---------------------------------------------------------------------------
+
+def test_batcher_seats_same_model_only():
+    tm = ModelZoo.from_spec(ZOO).time_model
+    batcher = StageBatcher(tm)
+    leader = mk_task(1.0, LLM_TIMES, model="llm")
+    cands = [mk_task(1.0, LLM_TIMES, model="llm"),
+             mk_task(1.0, VISION_TIMES, model="vision"),
+             mk_task(1.0, VISION_TIMES, model="vision")]
+    batch = batcher.form(leader, cands, 0.0)
+    assert len(batch) == 2
+    assert all(t.model == "llm" for t in batch)
+
+
+def test_batcher_prices_with_leaders_model_not_the_blend():
+    tm = ModelZoo.from_spec(ZOO).time_model
+    batcher = StageBatcher(tm)
+    w_vis = tm.for_model("vision").wcet(0, 2)
+    w_blend = tm.wcet(0, 2)
+    assert w_blend > w_vis                    # the test is only meaningful so
+    now, d = 0.0, w_vis + 1e-6                # fits vision pair, not blend pair
+    leader = mk_task(d, VISION_TIMES, model="vision")
+    mate = mk_task(d, VISION_TIMES, model="vision")
+    batch = batcher.form(leader, [mate], now)
+    assert len(batch) == 2                    # priced by vision's own table
+    assert not leader.fits_batch(now, w_blend)
+
+
+# ---------------------------------------------------------------------------
+# zoo admission control
+# ---------------------------------------------------------------------------
+
+def test_zoo_admission_prices_each_model_by_its_own_table():
+    tm = ModelZoo.from_spec(ZOO).time_model
+    adm = ZooAdmissionController(tm, mode="reject")
+    # a deadline between the two models' mandatory solo costs
+    d = (VISION_TIMES[0] + LLM_TIMES[0]) / 2
+    vis = mk_task(d, VISION_TIMES, model="vision")
+    llm = mk_task(d, LLM_TIMES, model="llm")
+    assert adm.decide([], vis, 0.0).admitted
+    dec = adm.decide([], llm, 0.0)
+    assert not dec.admitted and dec.reason == "mandatory-infeasible"
+    # the model-blind controller prices everyone at the blend: it would
+    # wrongly reject the cheap vision request too
+    blind = AdmissionController(tm, mode="reject")
+    assert not blind.decide([], vis, 0.0).admitted
+    # a model-less task falls back to the blended worst case
+    anon = mk_task(d, VISION_TIMES)
+    assert not adm.decide([], anon, 0.0).admitted
+
+
+# ---------------------------------------------------------------------------
+# rtdeepiot-zoo policy: scope semantics
+# ---------------------------------------------------------------------------
+
+def test_zoo_policy_rejects_unknown_scope():
+    pred = make_predictor("exp", prior_curve=PRIOR)
+    with pytest.raises(ValueError, match="scope"):
+        ZooRTDeepIoT(pred, scope="bogus")
+
+
+def test_siloed_scope_plans_each_model_partition_separately():
+    pred = make_predictor("exp", prior_curve=PRIOR)
+    pol = ZooRTDeepIoT(pred, scope="siloed")
+    active = [mk_task(1.0, LLM_TIMES, model="llm"),
+              mk_task(1.0, VISION_TIMES, model="vision"),
+              mk_task(1.0, VISION_TIMES)]          # model-less partition
+    pol._replan(active, 0.0)
+    assert set(pol._planners) == {"llm", "vision", None}
+    assert all(t.assigned_depth == t.num_stages for t in active)
+    glob = ZooRTDeepIoT(pred, scope="global")
+    glob._replan(active, 0.0)
+    assert glob._planners == {}                    # one joint FPTAS plan
+
+
+# ---------------------------------------------------------------------------
+# end to end: mixed-model overload, global vs siloed
+# ---------------------------------------------------------------------------
+
+def _weighted_admitted_acc(res, tables):
+    num = den = 0.0
+    for r in res.per_request:
+        if r["rejected"]:
+            continue
+        w = float(r["weight"])
+        den += w
+        ok = (not r["missed"]) and r["depth"] >= 1 and bool(
+            tables[r["model"]]["correct"][r["sample"], r["depth"] - 1])
+        num += w * float(ok)
+    return num / den if den else 0.0
+
+
+def test_model_mix_global_shedding_beats_siloed():
+    tables = zoo_tables()
+    results = {}
+    for scope in ("global", "siloed"):
+        spec = dataclasses.replace(
+            scenario_spec("model-mix", policy="rtdeepiot-zoo",
+                          policy_args={"predictor": "exp", "scope": scope},
+                          admission={"mode": "reject"},
+                          stage_times=MIX_STAGE_TIMES, n_requests=120,
+                          seed=0, models=ZOO),
+            executor="zoo-oracle")
+        results[scope] = Service.from_spec(
+            spec, zoo_tables=tables,
+            n_samples=tables["llm"]["conf"].shape[0]).run()
+    for res in results.values():
+        assert set(res.per_model) == {"llm", "vision"}
+        assert sum(m["n"] for m in res.per_model.values()) == res.n_requests
+        for row in res.per_model.values():
+            assert row["weighted_accuracy"] is not None
+            assert 0.0 <= row["weighted_accuracy"] <= 1.0
+    g = _weighted_admitted_acc(results["global"], tables)
+    s = _weighted_admitted_acc(results["siloed"], tables)
+    assert g >= s - 1e-9, (g, s)
+    assert results["global"].admitted_miss_rate \
+        <= results["siloed"].admitted_miss_rate + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# single-member zoo == the plain oracle path, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_single_model_zoo_matches_plain_oracle_bitwise():
+    # the reference is the weighted scheduler: ZooRTDeepIoT extends it, so
+    # at scope="global" with one model the plans must coincide exactly
+    rng = np.random.default_rng(11)
+    conf = np.sort(rng.uniform(0.3, 1.0, (160, 3)), axis=1)
+    correct = rng.uniform(size=(160, 3)) < conf
+    st = (0.004, 0.007, 0.010)
+    batching = {"buckets": [1, 2, 4], "stage_times": list(st),
+                "marginal": 0.25}
+    base = dataclasses.replace(
+        scenario_spec("steady", policy="rtdeepiot-weighted",
+                      policy_args={"predictor": "exp", "prior_curve": PRIOR},
+                      stage_times=st, n_requests=60, seed=5),
+        batching=batching)
+    zspec = dataclasses.replace(
+        base, executor="zoo-oracle", policy="rtdeepiot-zoo",
+        models={"m": {"stage_times": list(st), "buckets": [1, 2, 4],
+                      "marginal": 0.25, "utility": PRIOR}},
+        source_args={**base.source_args,
+                     "mix": [dict(c, model="m")
+                             for c in base.source_args["mix"]]})
+    res_base = Service.from_spec(base, conf_table=conf,
+                                 correct_table=correct,
+                                 n_samples=len(conf)).run()
+    res_zoo = Service.from_spec(
+        zspec, zoo_tables={"m": {"conf": conf, "correct": correct}},
+        n_samples=len(conf)).run()
+
+    def key(res):
+        return [(r["sample"], r["depth"], r["conf"], r["missed"],
+                 r["rejected"]) for r in res.per_request]
+    assert key(res_zoo) == key(res_base)
+    assert res_base.per_model == {}
+    assert set(res_zoo.per_model) == {"m"}
+    assert res_zoo.per_model["m"]["n"] == res_zoo.n_requests
+
+
+# ---------------------------------------------------------------------------
+# live-path fail-fast
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_unknown_zoo_model():
+    spec = ServeSpec(policy="edf", executor="zoo-oracle", clock="virtual",
+                     source="live",
+                     batching={"mode": "none",
+                               "stage_times": list(VISION_TIMES)},
+                     models=ZOO)
+    svc = Service.from_spec(spec, zoo_tables=zoo_tables())
+    try:
+        with pytest.raises(ValueError, match="unknown model 'nope'"):
+            svc.submit(Request(inputs=None, sample=0, rel_deadline=1.0,
+                               model="nope"))
+        # a defined model is accepted (buffered until drain)
+        svc.submit(Request(inputs=None, sample=1, rel_deadline=1.0,
+                           model="vision"))
+    finally:
+        svc.close()

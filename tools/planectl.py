@@ -10,7 +10,8 @@ the operator questions from the segments alone:
     PYTHONPATH=src python tools/planectl.py tail <journal_dir> [-n 10]
 
 ``stats`` — queue depth (durably submitted, not yet terminal),
-per-tenant admit/retire/reject counts, journal shape (segments, records,
+per-tenant admit/retire/reject counts, the same breakdown per zoo model
+(only when records carry ``model``), journal shape (segments, records,
 last seq).  ``pending`` — the request_ids :func:`recover` would redo.
 ``tail`` — the last N records, one JSON line each.
 
@@ -46,6 +47,11 @@ def _cmd_stats(args) -> int:
     print(f"queue_depth {st['queue_depth']}")
     for tenant, c in sorted(st["per_tenant"].items()):
         print(f"  tenant {tenant:<12} submitted={c['submitted']} "
+              f"admitted={c['admitted']} staged={c['staged']} "
+              f"retired={c['retired']} rejected={c['rejected']} "
+              f"pending={c['pending']}")
+    for model, c in sorted(st.get("per_model", {}).items()):
+        print(f"  model  {model:<12} submitted={c['submitted']} "
               f"admitted={c['admitted']} staged={c['staged']} "
               f"retired={c['retired']} rejected={c['rejected']} "
               f"pending={c['pending']}")
