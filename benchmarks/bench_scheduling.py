@@ -41,6 +41,12 @@ Figures reproduced (CPU-scale analog of CIFAR-10/ImageNet ResNet-3-stage):
            weighted admitted accuracy, plus the single-member zoo spec's
            bit-for-bit parity against the plain device-batched path
            [extension]
+  obs      the observability layer (repro.serving.obs): measured
+           wall-clock overhead of full tracing on the batch figure's
+           config (claim: < 5%), bitwise scheduling parity traced vs
+           untraced, audit-log coverage of every shed/rejected request
+           at 2x overload, and Chrome trace_event export validity
+           [extension]
 
 All rows print as CSV (name,metric,value triples per configuration) and are
 also returned as dicts (``SimResult.to_dict`` rows) for EXPERIMENTS.md
@@ -1137,6 +1143,109 @@ def zoo_claims(data, e2e):
     return claims
 
 
+def fig_obs(conf, correct, *, k=32, n_requests=600, reps=3,
+            overload_requests=300, write_trace=False):
+    """Observability layer (repro.serving.obs): the acceptance bar is
+    that full tracing is cheap enough to leave on — measured wall-clock
+    overhead on the batch figure's config, plus the three correctness
+    claims (bitwise parity, audit coverage at 2x overload, valid Chrome
+    trace_event export)."""
+    import time
+
+    from repro.serving import validate_chrome_trace
+    from repro.serving.traffic import scenario_spec
+
+    rows = []
+    wl_kwargs = dict(n_clients=k, n_requests=n_requests)
+    base = _spec("exp", batched=True, admission={"mode": "depth_cap"})
+
+    def run_once(trace):
+        spec = _dc.replace(base, trace=dict(trace))
+        t0 = time.perf_counter()
+        res = _serve(spec, conf, correct, **wl_kwargs)
+        return time.perf_counter() - t0, res
+
+    # interleaved best-of-reps: tracing-on and -off alternate so drift
+    # (thermal, allocator state) hits both arms equally
+    best = {"off": float("inf"), "on": float("inf")}
+    res_off = res_on = None
+    for _ in range(reps):
+        for label, trace in (("off", {}), ("on", {"enabled": True})):
+            dt, res = run_once(trace)
+            if dt < best[label]:
+                best[label] = dt
+            if label == "off":
+                res_off = res
+            else:
+                res_on = res
+    overhead = best["on"] / best["off"] - 1.0
+    _emit(rows, "obs", f"K={k}", "batched-rtdeepiot", res_off)
+    _emit(rows, "obs", f"K={k}", "batched-rtdeepiot-traced", res_on)
+    print(f"obs,K={k},trace_overhead={overhead:+.4f} "
+          f"(off={best['off']:.3f}s on={best['on']:.3f}s)")
+
+    def _sig(res):
+        obs_keys = ("queue_wait", "host_time", "device_time", "decision",
+                    "tid")
+        per = [tuple(sorted((kk, vv) for kk, vv in r.items()
+                            if kk not in obs_keys))
+               for r in res.per_request]
+        return (res.accuracy, res.miss_rate, res.mean_depth, res.mean_conf,
+                res.makespan, res.throughput, res.n_dispatches, per)
+
+    bitwise = _sig(res_on) == _sig(res_off)
+
+    # audit coverage: every rejected/capped request at 2x overload has an
+    # audit entry naming the rule that fired
+    spec = scenario_spec("2x-overload", stage_times=_stage_times(),
+                         n_requests=overload_requests,
+                         admission={"mode": "reject", "headroom": 3.0},
+                         trace={"enabled": True})
+    svc = Service.from_spec(spec, conf_table=conf, correct_table=correct)
+    svc.run()
+    audited = {row["tid"] for row in svc.obs.audit_log}
+    degraded = [tr for tr in svc.obs.traces.values()
+                if tr.rejected or tr.depth_cap is not None]
+    coverage = (sum(1 for tr in degraded if tr.tid in audited)
+                / len(degraded)) if degraded else 0.0
+    print(f"obs,2x-overload,degraded={len(degraded)},"
+          f"audit_rows={len(svc.obs.audit_log)},coverage={coverage:.3f}")
+
+    doc = svc.obs.chrome_trace()
+    problems = validate_chrome_trace(doc)
+    if write_trace:
+        os.makedirs(ART, exist_ok=True)
+        path = os.path.join(ART, "obs_trace.json")
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        print(f"obs,chrome_trace,{path},{len(doc['traceEvents'])} events")
+    data = dict(overhead=overhead, bitwise=bitwise, coverage=coverage,
+                chrome_problems=problems, n_degraded=len(degraded))
+    return rows, data
+
+
+def obs_claims(data, gate_overhead=True):
+    """Headline check for the observability layer: full tracing costs
+    < 5% wall clock on the batch figure, schedules bit-for-bit
+    identically, audits every degraded request, and exports a valid
+    Chrome trace_event document.  ``gate_overhead=False`` drops the
+    overhead bound from the verdict — the smoke leg's runs are too
+    short (~0.1s) for the wall-clock fraction to be signal; the
+    ``--only obs`` leg measures it at full size and asserts it."""
+    claims = {
+        "obs_trace_overhead_frac": round(data["overhead"], 4),
+        "obs_bitwise_identical": bool(data["bitwise"]),
+        "obs_audit_coverage": round(data["coverage"], 4),
+        "obs_chrome_trace_valid": not data["chrome_problems"],
+        "obs_claim_met": bool(
+            (not gate_overhead or data["overhead"] < 0.05)
+            and data["bitwise"] and data["coverage"] == 1.0
+            and not data["chrome_problems"]),
+    }
+    print("OBS CLAIMS:", claims)
+    return claims
+
+
 def summarize_claims(all_rows):
     """Validate the paper's headline claims on our reproduction."""
     byfig = {}
@@ -1229,7 +1338,7 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workloads, synthetic tables if artifact "
                          "missing, no artifact writes (CI job)")
-    ap.add_argument("--only", choices=("plane", "zoo"), default=None,
+    ap.add_argument("--only", choices=("plane", "zoo", "obs"), default=None,
                     help="run a single figure and merge its rows/claims "
                          "into artifacts/scheduling_results.json")
     args = ap.parse_args(argv)
@@ -1247,6 +1356,12 @@ def main(argv=None):
         if args.only == "plane":
             rows, pdata = fig_plane(conf, correct)
             claims = plane_claims(pdata)
+        elif args.only == "obs":
+            # the overhead claim is about the batch figure's regime, so
+            # measure at full size; best-of-5 keeps the minimum stable
+            # against scheduler noise on shared CI runners
+            rows, odata = fig_obs(conf, correct, reps=5)
+            claims = obs_claims(odata)
         else:
             rows, zdata, ze2e = fig_zoo(conf, correct)
             claims = zoo_claims(zdata, ze2e)
@@ -1295,6 +1410,9 @@ def main(argv=None):
         zrows, zdata, ze2e = fig_zoo(conf, correct, n_requests=150,
                                      e2e_requests=12)
         rows += zrows
+        orows, odata = fig_obs(conf, correct, k=16, n_requests=150,
+                               reps=2, overload_requests=150)
+        rows += orows
         claims = summarize_claims(rows)
         claims.update(batch_claims(speedups))
         claims.update(async_claims(comp))
@@ -1303,6 +1421,9 @@ def main(argv=None):
         claims.update(kernel_claims(kdeep, kragged, ke2e, comp))
         claims.update(plane_claims(pdata))
         claims.update(zoo_claims(zdata, ze2e))
+        # smoke runs are ~0.1s — too short for the overhead fraction to
+        # be signal; the --only obs leg asserts it at full size
+        claims.update(obs_claims(odata, gate_overhead=False))
         print(f"SMOKE OK: {len(rows)} rows")
         return rows, claims
 
@@ -1326,6 +1447,8 @@ def main(argv=None):
     rows += prows
     zrows, zdata, ze2e = fig_zoo(conf, correct)
     rows += zrows
+    orows, odata = fig_obs(conf, correct, write_trace=True)
+    rows += orows
     claims = summarize_claims(rows)
     claims.update(batch_claims(speedups))
     claims.update(async_claims(comp))
@@ -1334,6 +1457,7 @@ def main(argv=None):
     claims.update(kernel_claims(kdeep, kragged, ke2e, comp))
     claims.update(plane_claims(pdata))
     claims.update(zoo_claims(zdata, ze2e))
+    claims.update(obs_claims(odata))
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "scheduling_results.json"), "w") as f:
         json.dump({"rows": rows, "claims": claims}, f, indent=1)

@@ -41,6 +41,11 @@ from repro.serving.plane import (DurableQueue, FrontDoor, Journal, Record,
 from repro.serving.zoo import (ModelZoo, ZooAdmissionController, ZooModel,
                                ZooOracleExecutor, ZooRTDeepIoT,
                                ZooTimeModel)
+# observability: per-request tracing, decision audit log, metrics registry
+# (enable with ServeSpec(trace={"enabled": True}); see docs/observability.md)
+from repro.serving.obs import (MetricsRegistry, RequestTrace, Span, Tracer,
+                               chrome_trace, load_obs,
+                               validate_chrome_trace, write_jsonl)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
@@ -62,4 +67,7 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "DurableQueue", "FrontDoor", "Journal", "Record",
            "journal_stats", "recover", "scan_journal", "verify_recovery",
            "ModelZoo", "ZooAdmissionController", "ZooModel",
-           "ZooOracleExecutor", "ZooRTDeepIoT", "ZooTimeModel"]
+           "ZooOracleExecutor", "ZooRTDeepIoT", "ZooTimeModel",
+           "MetricsRegistry", "RequestTrace", "Span", "Tracer",
+           "chrome_trace", "load_obs", "validate_chrome_trace",
+           "write_jsonl"]

@@ -36,6 +36,10 @@ class AdmissionDecision:
     admitted: bool
     depth_cap: Optional[int]       # None = uncapped
     reason: str
+    # the numbers behind the rule that fired (slack, backlog, WCETs...);
+    # surfaced by the obs audit log so "why was this rejected?" has a
+    # quantitative answer.  None for plain admits.
+    detail: Optional[dict] = None
 
 
 class AdmissionController:
@@ -63,9 +67,13 @@ class AdmissionController:
         if self.mode == "off":
             return AdmissionDecision(True, None, "off")
         tm = self._tm_for(task)
+        slack = task.deadline - now
         mand_solo = sum(tm.wcet(s, 1) for s in range(task.mandatory))
         if not task.fits_batch(now, mand_solo):
-            return AdmissionDecision(False, None, "mandatory-infeasible")
+            return AdmissionDecision(
+                False, None, "mandatory-infeasible",
+                detail={"slack": slack, "mand_solo_wcet": mand_solo,
+                        "mandatory": task.mandatory})
         # optimistic backlog: mandatory work still owed by the active set,
         # at the best per-item rate batching can buy
         backlog = sum(
@@ -74,15 +82,23 @@ class AdmissionController:
             for t in active)
         own = sum(self._amortized(s, tm) for s in range(task.mandatory))
         if now + (backlog + own) * self.headroom > task.deadline:
+            detail = {"slack": slack, "backlog": backlog,
+                      "own_amortized": own, "headroom": self.headroom,
+                      "n_active": len(active)}
             if self.mode == "reject":
-                return AdmissionDecision(False, None, "overload")
-            return AdmissionDecision(True, task.mandatory, "overload-capped")
+                return AdmissionDecision(False, None, "overload",
+                                         detail=detail)
+            return AdmissionDecision(True, task.mandatory, "overload-capped",
+                                     detail=detail)
         if self.mode == "depth_cap":
             d = task.feasible_depth(now,
                                     stage_time=lambda s: tm.wcet(s, 1))
             if d < task.num_stages:
-                return AdmissionDecision(True, max(task.mandatory, d),
-                                         "deadline-capped")
+                return AdmissionDecision(
+                    True, max(task.mandatory, d), "deadline-capped",
+                    detail={"slack": slack, "feasible_depth": d,
+                            "num_stages": task.num_stages,
+                            "mand_solo_wcet": mand_solo})
         return AdmissionDecision(True, None, "ok")
 
     def apply(self, active, task, now: float) -> AdmissionDecision:

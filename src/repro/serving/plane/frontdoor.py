@@ -271,13 +271,13 @@ class FrontDoor:
         if bucket is not None and not bucket.allow(t_sub):
             if mc is not None:
                 mc["quota_rejected"] += 1
-            return self._quota_reject(request, name, slo, t_sub, c)
+            return self._quota_reject(request, name, slo, t_sub, c, bucket)
         if self.queue is not None:
             return self.queue.submit(request, slo=slo, at=at)
         return self.service.submit(request, slo=slo, at=at)
 
     def _quota_reject(self, request, tenant: str, slo, t_sub: float,
-                      counts: dict) -> ResponseHandle:
+                      counts: dict, bucket: TokenBucket) -> ResponseHandle:
         counts["quota_rejected"] += 1
         svc = self.service
         svc._tenant_rejects[tenant] = svc._tenant_rejects.get(tenant, 0) + 1
@@ -293,8 +293,12 @@ class FrontDoor:
                 model=getattr(request, "model", None))
         cls = svc.spec.slo_class(slo if slo is not None
                                  else getattr(request, "slo", None))
-        return svc._reject_overflow(ResponseHandle(svc, request), request,
-                                    cls)
+        return svc._reject_overflow(
+            ResponseHandle(svc, request), request, cls,
+            rule="tenant-quota", t=t_sub,
+            detail={"tenant": tenant, "rate": bucket.rate,
+                    "burst": bucket.burst,
+                    "tokens": round(bucket.tokens, 6)})
 
     def drain(self):
         return self.service.drain()

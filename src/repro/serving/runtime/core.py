@@ -125,12 +125,16 @@ class EngineCore:
     def __init__(self, policy, clock, executor, source, recorder, *,
                  admission=None, pipeline_depth: int = 1,
                  dispatch_overhead: float = 0.0, policy_cost=None,
-                 max_batch: int = None):
+                 max_batch: int = None, tracer=None):
         self.policy = policy               # a BatchPolicy (see as_batch_policy)
         self.clock = clock
         self.executor = executor
         self.source = source
         self.recorder = recorder
+        # optional obs hook (repro.serving.obs.Tracer) — passive: records
+        # engine-computed timestamps only, never charges host time, so the
+        # virtual timeline is identical with or without it
+        self.tracer = tracer
         # optional per-stage observation hook (Service streams anytime
         # exits through it); legacy recorders don't define it
         self._on_stage = getattr(recorder, "on_stage", None)
@@ -222,6 +226,8 @@ class EngineCore:
             cap = max(t.mandatory, t.executed)
             t.depth_cap = cap if t.depth_cap is None else min(t.depth_cap, cap)
             t.assigned_depth = max(t.executed, min(t.assigned_depth, cap))
+            if self.tracer is not None:
+                self.tracer.on_pullin(t, now, cap)
             # an in-flight member finishes its committed stage first (§II-B
             # non-preemption); _complete retires it via the depth check
             if t.executed >= cap and id(t) not in inflight:
@@ -264,10 +270,17 @@ class EngineCore:
     def _dispatch(self, now: float) -> bool:
         nb = None
         if self._presel is not None:
+            presel_tids = [t.tid for t in self._presel[1]] \
+                if self.tracer is not None else None
             nb = self._revalidate(self._presel, now)
             self._presel = None
             if nb is not None:
                 self.presel_hits += 1
+                if presel_tids is not None:
+                    final_tids = [t.tid for t in nb[1]]
+                    if final_tids != presel_tids:
+                        self.tracer.on_topoff(nb[0], presel_tids,
+                                              final_tids, now)
             else:
                 self.presel_misses += 1
         if nb is None:
@@ -286,6 +299,9 @@ class EngineCore:
         now = self.clock.now()        # charges may have advanced virtual time
         self.executor.submit(stage, batch, now)
         self.n_dispatches += 1
+        if self.tracer is not None:
+            self.tracer.on_dispatch(stage, batch, now,
+                                    self.executor.wcet(stage, len(batch)))
         if self.pipeline_depth >= 2:
             # async host: the submit returned without blocking — everything
             # the host does until the window closes can hide inside it
@@ -298,6 +314,8 @@ class EngineCore:
 
     def _complete(self) -> None:
         stage, batch = self.executor.complete(self.clock)
+        if self.tracer is not None:
+            self.tracer.on_window_close(stage, batch, self.clock.now())
         # the oldest window closed: drop its unused overlap budget; later
         # still-open windows keep theirs (empty list -> 0.0, the legacy
         # single-window behavior)
@@ -311,6 +329,8 @@ class EngineCore:
                 t.confidences.append(self.executor.commit(t, k))
                 if self._on_stage is not None:
                     self._on_stage(t, now)
+                if self.tracer is not None:
+                    self.tracer.on_stage_exit(t, now)
                 w0 = time.perf_counter()
                 self.policy.on_stage_done(self._active, t, now)
                 self._account(self._cost(time.perf_counter() - w0))
@@ -326,13 +346,20 @@ class EngineCore:
         task = self.source.pop(now)
         if task is None:
             return
+        tr = self.tracer
+        if tr is not None:
+            tr.on_admit(task, now, len(self._active))
         if self.admission is not None:
             dec = self.admission.apply(self._active, task, now)
+            if tr is not None:
+                tr.on_admission(task, now, dec)
             if not dec.admitted:
                 # rejecting is a scheduling decision, not an accounting
                 # trick: the request counts as a miss and frees its client
                 self._retire(task, now, rejected=True)
                 return
+        elif tr is not None:
+            tr.on_admission(task, now, None)
         self._active.append(task)
         w0 = time.perf_counter()
         self.policy.on_arrival(self._active, task, now)

@@ -168,6 +168,14 @@ class ServeSpec:
     # priced, planned and admitted against their own model's tables;
     # empty dict = single-model serving, bit-for-bit unchanged.
     models: dict = dataclasses.field(default_factory=dict)
+    # observability (repro.serving.obs): ``{"enabled": True}`` attaches a
+    # passive Tracer (per-request spans + decision audit log + metrics
+    # registry, reachable as ``service.obs`` after a run).  Optional keys:
+    # ``spans``/``audit``/``metrics`` (bools, default True) gate the three
+    # recording planes; ``export``/``chrome`` are file paths written when
+    # the run finishes (JSONL / Chrome trace_event JSON).  Empty dict =
+    # tracing off, zero overhead.
+    trace: dict = dataclasses.field(default_factory=dict)
 
     # -- round trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -241,6 +249,16 @@ class ServeSpec:
             # discipline as _validate_sharded_args
             from repro.serving.zoo import validate_models
             validate_models(self.models)
+        if self.trace:
+            from repro.serving.obs import TRACE_KEYS
+            unknown = set(self.trace) - set(TRACE_KEYS)
+            if unknown:
+                raise ValueError(f"unknown trace keys: {sorted(unknown)} "
+                                 f"(allowed: {TRACE_KEYS})")
+            for key in ("export", "chrome"):
+                v = self.trace.get(key)
+                if v is not None and not isinstance(v, str):
+                    raise ValueError(f"trace {key!r} must be a file path")
         if self.source == "frontdoor":
             disc = self.source_args.get("discipline")
             if disc is not None and disc not in ("drr", "fifo"):
@@ -639,6 +657,11 @@ class ServiceRecorder:
             depth_cap=task.depth_cap, tenant=tenant, request_id=rid,
             latency=latency, rejected=rejected, weight=task.weight,
             model=getattr(task, "model", None))
+        tracer = self.core.tracer if self.core is not None else None
+        if tracer is not None:
+            # injects queue_wait / host_time / device_time / decision into
+            # the row (emit-only-when-set) and closes the RequestTrace
+            tracer.finalize(task, now, rejected, t0, rec)
         self.records.append(rec)
         if self.observer is not None:
             # the WAL's terminal record, fsynced before _resolve below —
@@ -901,6 +924,11 @@ class Service:
         self._thread: Optional[threading.Thread] = None
         self._buffer: list = []         # virtual-clock live submissions
         self._last: Optional[ServiceMetrics] = None
+        self.obs = None                 # Tracer of the latest build
+        # intake-side audit rows (quota/bound rejects, sheds) raised before
+        # or outside the engine loop — drained into the tracer at build
+        # time and again when the run finishes
+        self._pending_audit: list = []
 
     @classmethod
     def from_spec(cls, spec: ServeSpec, resources: dict = None,
@@ -1035,6 +1063,13 @@ class Service:
             streamer = MetricsStreamer(spec.metrics_interval,
                                        self.resources.get("on_metrics"))
         recorder = ServiceRecorder(self, inner, executor, streamer=streamer)
+        tracer = None
+        if spec.trace and spec.trace.get("enabled", True):
+            from repro.serving.obs import Tracer
+            tracer = Tracer.from_config(spec.trace)
+            tracer.time_model = tm
+            tracer.ingest_pending(self._pending_audit)
+        self.obs = tracer
         pol = as_batch_policy(policy, tm, max_batch=max_batch,
                               charge_formation=charge_formation,
                               dp=getattr(executor, "dp", 1))
@@ -1042,7 +1077,8 @@ class Service:
                           admission=admission,
                           pipeline_depth=spec.pipeline_depth,
                           dispatch_overhead=spec.dispatch_overhead,
-                          policy_cost=spec.policy_cost, max_batch=eff_mb)
+                          policy_cost=spec.policy_cost, max_batch=eff_mb,
+                          tracer=tracer)
         recorder.core = core
         if streamer is not None:
             streamer.bind(core, source,
@@ -1168,7 +1204,9 @@ class Service:
                 warmup(min(stream, key=lambda p: p[0])[1].inputs)
         built.core.run()
         self._finish_streamer(built)
+        self._finish_obs(built)
         self._last = built.recorder.result(built.core)
+        self._reset_run_counters()
         return self._last
 
     # -- live mode -----------------------------------------------------
@@ -1253,11 +1291,19 @@ class Service:
         handle = ResponseHandle(self, request)
         bound = self.spec.source_args.get("bound")
         if bound is not None and self._intake_depth() >= int(bound):
+            t_sub = 0.0 if at is None else float(at)
+            detail = {"bound": int(bound),
+                      "intake_depth": self._intake_depth()}
             if self.spec.source_args.get("overflow",
                                          "reject") == "reject":
-                return self._reject_overflow(handle, request, cls)
+                return self._reject_overflow(handle, request, cls,
+                                             rule="intake-bound",
+                                             detail=detail, t=t_sub)
             request._shed = True
             self._n_shed += 1
+            self._audit_intake("intake-shed", t_sub, detail, request,
+                               cls.name if cls is not None else None,
+                               kind="shed")
         request._handle = handle
         self._submitted.add(handle)
         if self._is_realtime():
@@ -1274,18 +1320,47 @@ class Service:
         return self._ensure_live().source.qsize()
 
     def _reject_overflow(self, handle: ResponseHandle, request,
-                         cls: Optional[SLOClass]) -> ResponseHandle:
+                         cls: Optional[SLOClass], *,
+                         rule: str = "intake-bound", detail: dict = None,
+                         t: float = 0.0) -> ResponseHandle:
         """Bounded-intake fail-fast: resolve the handle rejected without
-        the request ever reaching the engine."""
+        the request ever reaching the engine.  ``rule``/``detail`` name
+        the decision for the obs audit log (the front door routes its
+        tenant-quota rejects here with its own rule)."""
         self._n_bp_rejected += 1
         name = cls.name if cls is not None else None
         if name is not None:
             self._bp_per_class[name] = self._bp_per_class.get(name, 0) + 1
+        self._audit_intake(rule, t, detail, request, name, kind="reject")
         handle._resolve(ServiceResponse(
             sample=request.sample, prediction=None, confidence=0.0,
             depth=0, missed=True, latency=0.0, deadline=0.0, slo=name,
             rejected=True))
         return handle
+
+    def _audit_intake(self, rule: str, t: float, detail: Optional[dict],
+                      request, slo: Optional[str], *, kind: str) -> None:
+        """Record an intake-side scheduler decision (reject/shed before
+        the engine ever saw the request) in the obs audit log.  Routed
+        straight into the live tracer when one is running, buffered in
+        ``_pending_audit`` otherwise (drained at build / run finish)."""
+        if not (self.spec.trace and self.spec.trace.get("enabled", True)):
+            return
+        row = {"rule": rule, "t": float(t), "detail": detail or {},
+               "kind": kind}
+        rid = getattr(request, "request_id", None)
+        if rid is not None:
+            row["request_id"] = rid
+        tenant = getattr(request, "tenant", None)
+        if tenant is not None:
+            row["tenant"] = tenant
+        if slo is not None:
+            row["slo"] = slo
+        tracer = self._live.core.tracer if self._live is not None else None
+        if tracer is not None:
+            tracer.ingest_pending([row])
+        else:
+            self._pending_audit.append(row)
 
     def _is_realtime(self) -> bool:
         """Whether live submissions go to a background engine (wall clock)
@@ -1319,7 +1394,9 @@ class Service:
                 raise RuntimeError("serving engine failed while live") \
                     from err
             self._finish_streamer(live)
+            self._finish_obs(live)
             self._last = live.recorder.result(live.core)
+            self._reset_run_counters()
             return self._last
         if self._buffer:
             buf, self._buffer = self._buffer, []
@@ -1333,7 +1410,9 @@ class Service:
                     h._fail(exc)
                 raise
             self._finish_streamer(built)
+            self._finish_obs(built)
             self._last = built.recorder.result(built.core)
+            self._reset_run_counters()
             return self._last
         return self._last if self._last is not None else self.metrics()
 
@@ -1342,6 +1421,24 @@ class Service:
         if streamer is not None:
             streamer.flush(built.core.makespan)
             self.snapshots = list(streamer.snapshots)
+
+    def _finish_obs(self, built: _Built) -> None:
+        tracer = built.core.tracer
+        if tracer is not None:
+            tracer.ingest_pending(self._pending_audit)
+            tracer.close()          # writes configured export files
+
+    def _reset_run_counters(self) -> None:
+        """Fresh-per-run semantics for the intake/backpressure counters on
+        a reused Service: the metrics just returned keep this run's
+        counts; the next ``run()``/``drain()`` starts from zero, matching
+        ``DeviceExecutor.device_time_stats()`` / ``cache_stats()`` (and
+        keeping ``MetricsStreamer`` window deltas from going stale)."""
+        self._n_cancelled = 0
+        self._n_bp_rejected = 0
+        self._n_shed = 0
+        self._bp_per_class = {}
+        self._tenant_rejects = {}
 
     def close(self) -> None:
         """Graceful shutdown: drain, then refuse further work.

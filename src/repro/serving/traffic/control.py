@@ -116,6 +116,14 @@ class MetricsStreamer:
 
     # ------------------------------------------------------------------
     def _counts(self) -> tuple:
+        # with the obs layer on, its registry is the single accumulation
+        # point (admission rejects/caps + intake rejects/sheds land there
+        # as they happen) — read it instead of re-deriving the split
+        tracer = getattr(self.core, "tracer", None) if self.core else None
+        reg = tracer.registry if tracer is not None else None
+        if reg is not None:
+            return (int(reg.counter("requests_rejected").value),
+                    int(reg.counter("requests_capped").value))
         adm = getattr(self.core, "admission", None) if self.core else None
         rejected = adm.rejected if adm is not None else 0
         capped = adm.capped if adm is not None else 0

@@ -39,6 +39,7 @@ DOCSTRING_MODULES = (
     ("repro.serving.registry", []),
     ("repro.serving.traffic.generators", []),
     ("repro.serving.service", ["ServeSpec", "Service", "ResponseHandle"]),
+    ("repro.serving.obs", []),
 )
 
 FENCE = re.compile(r"^```python([^\n`]*)\n(.*?)^```\s*$",

@@ -1,4 +1,5 @@
-"""planectl: offline health/stats over a durable-plane journal.
+"""planectl: offline health/stats over a durable-plane journal and
+observability exports.
 
 The journal directory (``repro.serving.plane.Journal``) is the request
 plane's source of truth, so this CLI needs no live process — it answers
@@ -15,8 +16,20 @@ per-tenant admit/retire/reject counts, the same breakdown per zoo model
 last seq).  ``pending`` — the request_ids :func:`recover` would redo.
 ``tail`` — the last N records, one JSON line each.
 
+Over an obs JSONL export (``ServeSpec(trace={"export": ...})`` or
+``Tracer.export_jsonl``; see docs/observability.md):
+
+    PYTHONPATH=src python tools/planectl.py trace <export> <request_id|tid>
+    PYTHONPATH=src python tools/planectl.py why   <export> <request_id|tid>
+    PYTHONPATH=src python tools/planectl.py top   <export> [-n 10] [--by X]
+
+``trace`` — the request's typed spans, chronologically.  ``why`` — its
+admission decision plus every audit-log rule that fired for it, with
+the numbers behind the rule.  ``top`` — worst requests by latency /
+queue_wait / device_time (``--by``), plus run totals.
+
 A live process answers the same questions (plus in-memory queue state)
-via ``FrontDoor.stats()``.
+via ``FrontDoor.stats()`` / ``Service.obs``.
 """
 from __future__ import annotations
 
@@ -72,6 +85,86 @@ def _cmd_tail(args) -> int:
     return 0
 
 
+# -- obs export subcommands -------------------------------------------------
+
+def _find_trace(obs: dict, key: str):
+    """Trace row for ``key`` (request_id, else numeric tid)."""
+    tid = obs["by_request_id"].get(key)
+    if tid is None and key.lstrip("-").isdigit():
+        tid = int(key)
+    return obs["traces"].get(tid)
+
+
+def _cmd_trace(args) -> int:
+    from repro.serving.obs import load_obs
+    obs = load_obs(args.export)
+    tr = _find_trace(obs, args.request)
+    if tr is None:
+        print(f"no trace for {args.request!r} "
+              f"({len(obs['traces'])} traces in export)", file=sys.stderr)
+        return 1
+    label = tr.get("request_id", f"tid {tr['tid']}")
+    print(f"request {label}  decision={tr.get('decision', '?')}  "
+          f"depth={tr.get('depth')}  latency={tr.get('latency', 0.0):.4f}")
+    for part in ("queue_wait", "host_time", "device_time"):
+        if part in tr:
+            print(f"  {part:<12} {tr[part]:.6f}")
+    for s in tr["spans"]:
+        attrs = s.get("attrs", {})
+        extra = "  " + json.dumps(attrs) if attrs else ""
+        print(f"  {s['t0']:10.4f} .. {s['t1']:10.4f}  "
+              f"{s['name']:<14}{extra}")
+    return 0
+
+
+def _cmd_why(args) -> int:
+    from repro.serving.obs import load_obs
+    obs = load_obs(args.export)
+    tr = _find_trace(obs, args.request)
+    rows = [r for r in obs["audit"]
+            if (tr is not None and r.get("tid") == tr["tid"])
+            or r.get("request_id") == args.request]
+    if tr is None and not rows:
+        print(f"no trace or audit rows for {args.request!r}",
+              file=sys.stderr)
+        return 1
+    if tr is not None:
+        out = "expired" if tr.get("missed") else "served"
+        if tr.get("rejected"):
+            out = "rejected"
+        print(f"request {tr.get('request_id', tr['tid'])}: {out}  "
+              f"decision={tr.get('decision', '?')}  depth={tr.get('depth')}"
+              f"  latency={tr.get('latency', 0.0):.4f}")
+    for r in rows:
+        print(f"  t={r['t']:.4f}  rule={r['rule']}  "
+              f"{json.dumps(r.get('detail', {}), sort_keys=True)}")
+    if tr is not None and not rows:
+        print("  no scheduler rule fired (clean admit)")
+    return 0
+
+
+def _cmd_top(args) -> int:
+    from repro.serving.obs import load_obs
+    obs = load_obs(args.export)
+    traces = list(obs["traces"].values())
+    traces.sort(key=lambda t: t.get(args.by, 0.0) or 0.0, reverse=True)
+    print(f"{'request':<24} {'decision':<18} {'depth':>5} "
+          f"{'latency':>9} {'q_wait':>9} {'device':>9}")
+    for tr in traces[:args.n]:
+        print(f"{str(tr.get('request_id', tr['tid'])):<24} "
+              f"{str(tr.get('decision', '?')):<18} "
+              f"{str(tr.get('depth', '?')):>5} "
+              f"{tr.get('latency', 0.0):9.4f} "
+              f"{tr.get('queue_wait', 0.0):9.4f} "
+              f"{tr.get('device_time', 0.0):9.4f}")
+    n = len(traces)
+    missed = sum(1 for t in traces if t.get("missed"))
+    rejected = sum(1 for t in traces if t.get("rejected"))
+    print(f"total {n} traced  missed={missed}  rejected={rejected}  "
+          f"audit_rows={len(obs['audit'])}  windows={len(obs['windows'])}")
+    return 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(prog="planectl", description=__doc__)
     sub = p.add_subparsers(dest="cmd", required=True)
@@ -92,6 +185,27 @@ def main(argv=None) -> int:
     sp.add_argument("journal")
     sp.add_argument("-n", type=int, default=10)
     sp.set_defaults(fn=_cmd_tail)
+
+    sp = sub.add_parser("trace",
+                        help="one request's typed spans from an obs export")
+    sp.add_argument("export", help="obs JSONL export file")
+    sp.add_argument("request", help="request_id or tid")
+    sp.set_defaults(fn=_cmd_trace)
+
+    sp = sub.add_parser("why",
+                        help="which scheduler rules fired for a request, "
+                             "with their inputs")
+    sp.add_argument("export")
+    sp.add_argument("request")
+    sp.set_defaults(fn=_cmd_why)
+
+    sp = sub.add_parser("top", help="worst traced requests + run totals")
+    sp.add_argument("export")
+    sp.add_argument("-n", type=int, default=10)
+    sp.add_argument("--by", default="latency",
+                    choices=("latency", "queue_wait", "device_time",
+                             "host_time"))
+    sp.set_defaults(fn=_cmd_top)
 
     args = p.parse_args(argv)
     return args.fn(args)
