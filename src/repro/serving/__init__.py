@@ -46,6 +46,13 @@ from repro.serving.zoo import (ModelZoo, ZooAdmissionController, ZooModel,
 from repro.serving.obs import (MetricsRegistry, RequestTrace, Span, Tracer,
                                chrome_trace, load_obs,
                                validate_chrome_trace, write_jsonl)
+# adaptive control registers "rtdeepiot-adaptive" — learned workload /
+# confidence curves, predictive admission, wall-clock traffic driver
+# (see repro.serving.adaptive and docs/adaptive.md)
+from repro.serving.adaptive import (OnlineCurveEstimator,
+                                    PredictiveAdmissionController,
+                                    TrafficDriver, fit_arrival_process,
+                                    fit_report)
 
 __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "make_stage_fns", "profile_host_overhead", "profile_stages",
@@ -70,4 +77,6 @@ __all__ = ["Request", "Response", "ServingEngine", "closed_loop_stream",
            "ZooOracleExecutor", "ZooRTDeepIoT", "ZooTimeModel",
            "MetricsRegistry", "RequestTrace", "Span", "Tracer",
            "chrome_trace", "load_obs", "validate_chrome_trace",
-           "write_jsonl"]
+           "write_jsonl",
+           "OnlineCurveEstimator", "PredictiveAdmissionController",
+           "TrafficDriver", "fit_arrival_process", "fit_report"]

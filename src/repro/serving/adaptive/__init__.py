@@ -1,0 +1,67 @@
+"""Adaptive control: learned workload + confidence curves, predictive
+admission, wall-clock traffic — ``repro.serving.adaptive``.
+
+ROADMAP open item 4, four legs over the existing subsystems (all wired
+through the registry/ServeSpec front door — no core-loop changes):
+
+* **workload** — fit Poisson/MMPP/diurnal/flash-crowd parameters from
+  recorded arrivals (traces, journals, ``per_request`` rows) and score
+  which kind best explains a trace (:func:`fit_report`).
+* **curves** — :class:`OnlineCurveEstimator` learns per-class
+  confidence-vs-depth tables from observed stage exits;
+  ``policy="rtdeepiot-adaptive"`` plans the FPTAS against the live
+  learned curve (a ``curve_estimator`` resource shares/warms tables
+  across runs).
+* **admission** — :class:`PredictiveAdmissionController` degrades at
+  admission time when the fitted process forecasts near-term arrivals
+  above capacity; enabled by ``spec.admission["forecast"]``.
+* **driver** — :class:`TrafficDriver` paces generator/trace streams into
+  ``Service.submit()`` on the wall clock with a replay ``speed`` factor.
+
+Importing this package (``repro.serving`` does it) registers the
+``rtdeepiot-adaptive`` policy key.
+"""
+from repro.serving.adaptive.admission import (PredictiveAdmissionController,
+                                              predictive_admission)
+from repro.serving.adaptive.curves import (AdaptivePredictor,
+                                           AdaptiveRTDeepIoT,
+                                           OnlineCurveEstimator)
+from repro.serving.adaptive.driver import TrafficDriver
+from repro.serving.adaptive.workload import (extract_offsets,
+                                             fit_arrival_process,
+                                             fit_diurnal, fit_flash_crowd,
+                                             fit_mmpp, fit_poisson,
+                                             fit_report)
+from repro.serving.registry import register_policy
+
+__all__ = ["OnlineCurveEstimator", "AdaptivePredictor", "AdaptiveRTDeepIoT",
+           "PredictiveAdmissionController", "predictive_admission",
+           "TrafficDriver", "extract_offsets", "fit_arrival_process",
+           "fit_poisson", "fit_mmpp", "fit_diurnal", "fit_flash_crowd",
+           "fit_report"]
+
+
+@register_policy("rtdeepiot-adaptive")
+def _make_rtdeepiot_adaptive(args: dict, ctx):
+    """RTDeepIoT planning against *learned* confidence curves.
+
+    args: ``delta`` (FPTAS quantization), ``decay`` / ``prior_weight``
+    (estimator window), ``prior_curve`` (seed table; default
+    ``conf_table.mean(0)`` when the resource exists).  A
+    ``curve_estimator`` resource (an :class:`OnlineCurveEstimator`)
+    overrides everything — pass the same instance to successive builds to
+    keep the learned tables warm across runs.
+    """
+    est = ctx.resources.get("curve_estimator")
+    if est is None:
+        prior = args.get("prior_curve")
+        if prior is None:
+            ct = ctx.resources.get("conf_table")
+            prior = ct.mean(0) if ct is not None else None
+        num_stages = (len(prior) if prior is not None
+                      else len(ctx.time_model.single_times()))
+        est = OnlineCurveEstimator(
+            num_stages=num_stages, prior=prior,
+            decay=float(args.get("decay", 0.02)),
+            prior_weight=float(args.get("prior_weight", 4.0)))
+    return AdaptiveRTDeepIoT(est, delta=float(args.get("delta", 0.1)))

@@ -1,0 +1,146 @@
+"""Predictive admission: tighten *ahead* of a forecast burst
+(ROADMAP open item 4, third leg).
+
+The reactive :class:`~repro.serving.batch.admission.AdmissionController`
+prices the queue it can see; under a flash crowd that means the first
+spike arrivals are admitted at full depth and miss their deadlines before
+the backlog term ever registers.  This controller adds a forecast hook: a
+fitted :class:`~repro.serving.traffic.generators.ArrivalProcess` (from
+:mod:`~repro.serving.adaptive.workload`, e.g. yesterday's trace) predicts
+the near-term arrival rate, and when that forecast exceeds the engine's
+nominal full-depth capacity the controller degrades *at admission time*:
+
+* ``mode="depth_cap"`` — requests admitted inside the forecast window are
+  pinned to their mandatory depth (``forecast-capped``): optional stages
+  are shed before the burst arrives, not after the queue grows.
+* ``mode="reject"`` — the forecast-implied work expected to land within
+  the request's slack joins the backlog term; a request whose deadline
+  cannot absorb it is refused (``forecast-overload``).
+
+Every forecast decision carries the numbers behind the rule
+(forecast rate, capacity, margin, horizon) in
+:class:`~repro.serving.batch.admission.AdmissionDecision.detail`, so the
+observability audit log answers "why was this degraded?" quantitatively
+(``planectl why`` / ``service.obs.audit_log``).
+
+Spec wiring (JSON-round-trippable through ``ServeSpec``)::
+
+    admission={"mode": "depth_cap",
+               "forecast": {"process": fitted.to_dict(),  # arrival kind
+                            "horizon": 0.25,              # lookahead (s)
+                            "margin": 1.0,                # of capacity
+                            "capacity": None}}            # default: nominal
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.batch.admission import (AdmissionController,
+                                           AdmissionDecision)
+
+__all__ = ["PredictiveAdmissionController", "predictive_admission"]
+
+#: points sampled across the lookahead window when averaging rate_at
+_FORECAST_POINTS = 9
+
+
+class PredictiveAdmissionController(AdmissionController):
+    """Reactive admission + a fitted-process forecast rule (see module
+    docstring).  ``process=None`` degrades to the reactive base."""
+
+    def __init__(self, time_model, mode: str = "depth_cap",
+                 headroom: float = 1.0, *, process=None,
+                 horizon: float = 0.25, margin: float = 1.0,
+                 capacity: float = None):
+        super().__init__(time_model, mode=mode, headroom=headroom)
+        self.process = process
+        self.horizon = float(horizon)
+        self.margin = float(margin)
+        if capacity is None:
+            # nominal full-depth service rate, the traffic scenarios' anchor
+            capacity = 1.0 / sum(time_model.single_times())
+        self.capacity = float(capacity)
+        self.forecasted = 0          # forecast rules fired (capped+rejected)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(cls, time_model, admission: dict,
+                    **kwargs) -> "PredictiveAdmissionController":
+        """Build from a ``ServeSpec.admission`` dict with a ``forecast``
+        key; the process sub-dict is a ``make_arrival_process`` kind."""
+        from repro.serving.traffic.generators import make_arrival_process
+        fc = dict(admission.get("forecast") or {})
+        proc = fc.get("process")
+        if isinstance(proc, dict):
+            proc = make_arrival_process(**proc)
+        return cls(time_model,
+                   mode=admission.get("mode", "depth_cap"),
+                   headroom=float(admission.get("headroom", 1.0)),
+                   process=proc,
+                   horizon=float(fc.get("horizon", 0.25)),
+                   margin=float(fc.get("margin", 1.0)),
+                   capacity=fc.get("capacity"), **kwargs)
+
+    # ------------------------------------------------------------------
+    def forecast_rate(self, now: float) -> float:
+        """Mean predicted arrival rate over ``[now, now + horizon]``
+        (processes without a pointwise rate — MMPP — use their long-run
+        mean)."""
+        p = self.process
+        if p is None:
+            return 0.0
+        try:
+            ts = np.linspace(now, now + self.horizon, _FORECAST_POINTS)
+            return float(np.mean([p.rate_at(t) for t in ts]))
+        except NotImplementedError:
+            return float(p.mean_rate)
+
+    def decide(self, active, task, now: float) -> AdmissionDecision:
+        dec = super().decide(active, task, now)
+        if (not dec.admitted or self.process is None
+                or self.mode == "off"):
+            return dec
+        rate = self.forecast_rate(now)
+        if rate <= self.capacity * self.margin:
+            return dec
+        tm = self._tm_for(task)
+        detail = {"forecast_rate": rate, "capacity": self.capacity,
+                  "margin": self.margin, "horizon": self.horizon,
+                  "slack": task.deadline - now}
+        if self.mode == "reject":
+            # forecast-implied mandatory work landing within this task's
+            # slack competes for the same device
+            own = sum(self._amortized(s, tm) for s in range(task.mandatory))
+            backlog = sum(
+                sum(self._amortized(s, self._tm_for(t))
+                    for s in range(t.executed, max(t.mandatory, t.executed)))
+                for t in active)
+            window = min(self.horizon, max(task.deadline - now, 0.0))
+            expected = rate * window * own
+            if now + (backlog + own + expected) * self.headroom \
+                    > task.deadline:
+                self.forecasted += 1
+                detail.update(backlog=backlog, own_amortized=own,
+                              expected_work=expected,
+                              headroom=self.headroom)
+                return AdmissionDecision(False, None, "forecast-overload",
+                                         detail=detail)
+            return dec
+        # depth_cap: shed optional stages ahead of the predicted burst
+        cap = task.mandatory
+        if dec.depth_cap is None or dec.depth_cap > cap:
+            self.forecasted += 1
+            return AdmissionDecision(True, cap, "forecast-capped",
+                                     detail=detail)
+        return dec
+
+
+def predictive_admission(time_model, admission: dict, base_cls=None):
+    """Factory for :class:`Service`: a predictive controller whose
+    per-task WCET resolution comes from ``base_cls`` (the zoo controller
+    overrides ``_tm_for``) when one is given."""
+    cls = PredictiveAdmissionController
+    if base_cls is not None and base_cls is not AdmissionController:
+        cls = type(f"Predictive{base_cls.__name__}",
+                   (PredictiveAdmissionController, base_cls), {})
+    return cls.from_config(time_model, admission)

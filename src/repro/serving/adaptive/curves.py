@@ -1,0 +1,205 @@
+"""Online confidence-curve estimation (ROADMAP open item 4, second leg).
+
+The FPTAS plans against a confidence-vs-depth curve per task; everywhere
+else in the repo that curve is a *static* prior (``conf_table.mean(0)``
+from offline calibration).  :class:`OnlineCurveEstimator` learns it from
+the stage exits the scheduler observes anyway: every completed stage
+reports a measured exit confidence at a depth, and an exponential-decay
+window per (class key, depth) cell keeps the table fresh under drift
+while converging to the oracle mean table under stationary traffic.
+
+:class:`AdaptivePredictor` plugs the live table into the paper's utility
+interface (measured prefix, learned ratio-anchored suffix, monotone in
+depth), and :class:`AdaptiveRTDeepIoT` — registered as
+``register_policy("rtdeepiot-adaptive")`` — feeds every observed stage
+exit back into the estimator before the §II-E greedy update runs.
+
+```python
+import numpy as np
+from repro.serving.adaptive import OnlineCurveEstimator
+
+oracle = np.sort(np.random.default_rng(0).uniform(0.3, 1.0, (500, 3)),
+                 axis=1)
+est = OnlineCurveEstimator(num_stages=3, prior_weight=0.0)
+for row in oracle:
+    for depth, conf in enumerate(row, start=1):
+        est.observe(depth, conf)
+learned = est.curve()
+assert np.all(np.diff(learned) >= 0)          # monotone in depth
+assert np.abs(learned - oracle.mean(0)).max() < 0.1
+```
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.schedulers import RTDeepIoT
+from repro.core.utility import UtilityPredictor
+
+__all__ = ["OnlineCurveEstimator", "AdaptivePredictor", "AdaptiveRTDeepIoT"]
+
+#: estimator table key for single-model traffic
+GLOBAL_KEY = None
+
+
+class OnlineCurveEstimator:
+    """Per-class confidence-vs-depth tables from observed stage exits.
+
+    Each (key, depth) cell is an exponentially-decayed weighted mean:
+    ``observe`` scales the cell's weight and sum by ``1 - decay`` and
+    adds the new outcome, so the effective window is ``~1/decay``
+    observations and stale traffic ages out.  ``curve(key)`` blends the
+    cell means with the prior curve at ``prior_weight`` pseudo-counts
+    (unseen depths fall back to the prior entirely) and enforces
+    monotone-in-depth via a running maximum — the shape the FPTAS
+    utility tables require.
+
+    ``key`` is any hashable class label (model id, SLO tier, tenant);
+    ``None`` is the single-model global table.
+    """
+
+    def __init__(self, num_stages: int, prior=None, decay: float = 0.02,
+                 prior_weight: float = 4.0):
+        if num_stages < 1:
+            raise ValueError("num_stages must be >= 1")
+        if not 0.0 <= decay < 1.0:
+            raise ValueError("decay must be in [0, 1)")
+        self.num_stages = int(num_stages)
+        if prior is None:
+            # weak default: linear ramp toward confident late exits
+            prior = np.linspace(0.5, 0.9, self.num_stages)
+        self.prior = np.clip(np.maximum.accumulate(
+            np.asarray(prior, np.float64)), 0.0, 1.0)
+        if len(self.prior) != self.num_stages:
+            raise ValueError(f"prior has {len(self.prior)} entries for "
+                             f"{self.num_stages} stages")
+        self.decay = float(decay)
+        self.prior_weight = float(prior_weight)
+        self._w: dict = {}           # key -> per-depth decayed weights
+        self._s: dict = {}           # key -> per-depth decayed conf sums
+        self.n_observed = 0
+
+    # ------------------------------------------------------------------
+    def _cells(self, key):
+        if key not in self._w:
+            self._w[key] = np.zeros(self.num_stages)
+            self._s[key] = np.zeros(self.num_stages)
+        return self._w[key], self._s[key]
+
+    def observe(self, depth: int, conf: float, key=GLOBAL_KEY) -> None:
+        """One stage-exit outcome: measured ``conf`` at ``depth`` (1..L)."""
+        if not 1 <= depth <= self.num_stages:
+            raise ValueError(f"depth {depth} not in 1..{self.num_stages}")
+        w, s = self._cells(key)
+        d = depth - 1
+        w[d] = (1.0 - self.decay) * w[d] + 1.0
+        s[d] = (1.0 - self.decay) * s[d] + float(conf)
+        self.n_observed += 1
+
+    def observe_exits(self, confidences, key=GLOBAL_KEY) -> None:
+        """A full per-stage exit record (depth = position + 1)."""
+        for depth, conf in enumerate(confidences, start=1):
+            self.observe(depth, float(conf), key=key)
+
+    # ------------------------------------------------------------------
+    def weight(self, key=GLOBAL_KEY) -> np.ndarray:
+        """Effective observation weight per depth (0 = never observed)."""
+        return self._w.get(key, np.zeros(self.num_stages)).copy()
+
+    def curve(self, key=GLOBAL_KEY) -> np.ndarray:
+        """The learned confidence-vs-depth curve for ``key``: prior-blended
+        decayed means, clipped to [0, 1], monotone non-decreasing."""
+        w, s = self._w.get(key), self._s.get(key)
+        if w is None:
+            out = self.prior.copy()
+        else:
+            out = ((s + self.prior_weight * self.prior)
+                   / np.maximum(w + self.prior_weight, 1e-12))
+            never = (w <= 0) & (self.prior_weight <= 0)
+            out[never] = self.prior[never]
+        return np.maximum.accumulate(np.clip(out, 0.0, 1.0))
+
+    def keys(self) -> list:
+        return list(self._w)
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-able snapshot (string-keyed; ``None`` -> ``""``)."""
+        return {"num_stages": self.num_stages, "decay": self.decay,
+                "prior_weight": self.prior_weight,
+                "prior": [float(x) for x in self.prior],
+                "tables": {("" if k is None else str(k)):
+                           {"w": [float(x) for x in self._w[k]],
+                            "s": [float(x) for x in self._s[k]]}
+                           for k in self._w}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OnlineCurveEstimator":
+        est = cls(d["num_stages"], prior=d.get("prior"),
+                  decay=d.get("decay", 0.02),
+                  prior_weight=d.get("prior_weight", 4.0))
+        for k, t in d.get("tables", {}).items():
+            key = None if k == "" else k
+            est._w[key] = np.asarray(t["w"], np.float64)
+            est._s[key] = np.asarray(t["s"], np.float64)
+        return est
+
+
+def _default_key(task):
+    return getattr(task, "model", None)
+
+
+class AdaptivePredictor(UtilityPredictor):
+    """§II-D utility predictor backed by a live learned curve.
+
+    Measured confidences win at depths already executed; deeper depths
+    read the estimator's class curve, ratio-anchored at the task's last
+    measured confidence (the Lin heuristic's anchoring, but against the
+    *learned* population curve instead of cumulative execution time).
+    Predictions stay monotone non-decreasing beyond the executed prefix
+    and never fall below the last measured value.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, estimator: OnlineCurveEstimator,
+                 key_fn: Optional[Callable] = None):
+        super().__init__(estimator.prior)
+        self.estimator = estimator
+        self.key_fn = key_fn or _default_key
+
+    def predict(self, task, depth):
+        e = task.executed
+        if depth <= e and task.confidences:
+            return float(task.confidences[depth - 1])
+        curve = self.estimator.curve(self.key_fn(task))
+        c = float(curve[min(depth, len(curve)) - 1])
+        if task.confidences:
+            last = float(task.confidences[-1])
+            anchor = float(curve[min(max(e, 1), len(curve)) - 1])
+            if anchor > 1e-9:
+                c = last * (c / anchor)
+            c = max(c, last)
+        return float(min(1.0, max(0.0, c)))
+
+
+class AdaptiveRTDeepIoT(RTDeepIoT):
+    """The paper's scheduler with learned utility tables: every observed
+    stage exit updates the estimator *before* the §II-E greedy check, so
+    the very next replan plans against the refreshed curve."""
+
+    def __init__(self, estimator: OnlineCurveEstimator, delta: float = 0.1,
+                 key_fn: Optional[Callable] = None):
+        super().__init__(AdaptivePredictor(estimator, key_fn), delta=delta)
+        self.estimator = estimator
+        self.name = "rtdeepiot-adaptive"
+
+    def on_stage_done(self, active, task, now):
+        if task.confidences and task.executed >= 1:
+            self.estimator.observe(
+                min(task.executed, self.estimator.num_stages),
+                float(task.confidences[-1]),
+                key=self.predictor.key_fn(task))
+        super().on_stage_done(active, task, now)

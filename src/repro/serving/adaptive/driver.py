@@ -1,0 +1,146 @@
+"""Wall-clock traffic driver: generators feeding ``Service.submit()`` in
+real time (ROADMAP open item 4, fourth leg).
+
+The ``traffic`` registry source materializes an arrival process into a
+virtual-clock stream; that validates scheduling logic but never exercises
+the live intake path (submit -> LiveSource -> background engine ->
+ResponseHandle).  :class:`TrafficDriver` closes that gap: the same seeded
+``ArrivalProcess`` x :class:`~repro.serving.traffic.mix.RequestMix`
+materialization, but paced against the real clock into ``submit()`` —
+with a replay ``speed`` factor (2.0 = twice as fast as recorded/sampled),
+so a day of diurnal traffic compresses into a test-sized burst.  A
+recorded trace replays the same way via :meth:`TrafficDriver.from_trace`.
+
+```python no-run
+from repro.serving.adaptive import TrafficDriver
+
+svc = Service.from_spec(spec, conf_table=conf, correct_table=correct)
+drv = TrafficDriver(svc, arrival={"kind": "poisson", "rate": 40.0},
+                    mix=[{"slo": "gold", "share": 1.0}], n_samples=100,
+                    n_requests=200, seed=0, speed=4.0)
+drv.run()                      # blocks; .start() runs on a thread
+res = svc.drain()
+assert res.n_requests == drv.submitted
+```
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.serving.traffic.mix import RequestMix
+
+__all__ = ["TrafficDriver"]
+
+#: sleep granularity while pacing (bounded so stop() stays responsive)
+_MAX_SLEEP = 0.02
+
+
+class TrafficDriver:
+    """Pace an open-loop request stream into ``Service.submit()`` on the
+    wall clock.
+
+    The stream is pre-materialized exactly as the virtual-clock
+    ``traffic`` source does it — ``arrival.sample(rng)`` then
+    ``mix.stream(rng, offsets)`` from one seeded generator — so the same
+    (arrival, mix, seed) triple produces the same requests on either
+    clock; only the pacing differs.  ``speed`` divides every offset:
+    2.0 replays twice as fast, 0.5 at half speed.
+    """
+
+    def __init__(self, service, *, arrival=None, offsets=None, mix=None,
+                 n_samples: int = None, n_requests: int = None,
+                 horizon: float = None, seed: int = 0, speed: float = 1.0,
+                 inputs_fn=None, tenant=None):
+        if speed <= 0:
+            raise ValueError("speed must be > 0")
+        self.service = service
+        self.speed = float(speed)
+        self.tenant = tenant
+        rng = np.random.default_rng(seed)
+        if offsets is None:
+            if arrival is None:
+                raise ValueError("need arrival=... or offsets=...")
+            if isinstance(arrival, dict):
+                from repro.serving.traffic.generators import \
+                    make_arrival_process
+                arrival = make_arrival_process(**arrival)
+            if n_requests is None and horizon is None:
+                raise ValueError("need n_requests and/or horizon")
+            offsets = arrival.sample(rng, n=n_requests, horizon=horizon)
+        if isinstance(mix, RequestMix):
+            pass
+        elif mix is not None:
+            if n_samples is None:
+                raise ValueError("mix classes need n_samples=...")
+            mix = RequestMix(mix, n_samples=n_samples, inputs_fn=inputs_fn)
+        else:
+            if n_samples is None:
+                raise ValueError("need mix=... or n_samples=...")
+            mix = RequestMix([], n_samples=n_samples, inputs_fn=inputs_fn)
+        self.stream = mix.stream(rng, offsets)
+        self.handles: list = []
+        self.submitted = 0
+        self._stop = threading.Event()
+        self._thread = None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_trace(cls, service, events, *, speed: float = 1.0):
+        """Replay recorded trace events (``load_trace`` output) against
+        the live service at ``speed``x real time."""
+        from repro.serving.traffic.trace import replay_stream
+        drv = cls.__new__(cls)
+        drv.service = service
+        drv.speed = float(speed)
+        drv.tenant = None
+        drv.stream = replay_stream(events)
+        drv.handles = []
+        drv.submitted = 0
+        drv._stop = threading.Event()
+        drv._thread = None
+        if drv.speed <= 0:
+            raise ValueError("speed must be > 0")
+        return drv
+
+    # ------------------------------------------------------------------
+    def run(self) -> int:
+        """Feed the whole stream, blocking; returns requests submitted."""
+        t0 = time.perf_counter()
+        for off, req in self.stream:
+            target = float(off) / self.speed
+            while not self._stop.is_set():
+                dt = target - (time.perf_counter() - t0)
+                if dt <= 0:
+                    break
+                time.sleep(min(dt, _MAX_SLEEP))
+            if self._stop.is_set():
+                break
+            kw = {}
+            if self.tenant is not None:
+                kw["tenant"] = self.tenant
+            self.handles.append(self.service.submit(req, **kw))
+            self.submitted += 1
+        return self.submitted
+
+    def start(self) -> "TrafficDriver":
+        """Run on a daemon thread; pair with :meth:`join`."""
+        if self._thread is not None:
+            raise RuntimeError("driver already started")
+        self._thread = threading.Thread(target=self.run,
+                                        name="traffic-driver", daemon=True)
+        self._thread.start()
+        return self
+
+    def join(self, timeout: float = None) -> bool:
+        """Wait for the feed thread; True when it finished."""
+        if self._thread is None:
+            return True
+        self._thread.join(timeout)
+        return not self._thread.is_alive()
+
+    def stop(self) -> None:
+        """Abort pacing; an in-flight sleep wakes within ~20 ms."""
+        self._stop.set()

@@ -1,0 +1,314 @@
+"""Trace-driven workload estimation: fit arrival-process parameters from
+recorded arrivals (ROADMAP open item 4, first leg).
+
+Every serving run leaves an arrival record behind — a traffic trace
+(``repro.serving.traffic.trace``), a durable-plane journal
+(``repro.serving.plane``), or just ``ServiceMetrics.per_request`` rows.
+This module closes the loop: given those recorded offsets, fit the
+parameters of each :mod:`~repro.serving.traffic.generators` arrival kind
+by method of moments (Poisson), on/off burst segmentation (MMPP),
+harmonic regression on the Rayleigh-scored period (diurnal), or spike
+segmentation (flash-crowd), and score which kind best explains the trace
+(windowed Poisson log-likelihood with a BIC complexity penalty).
+
+The fitted dicts are ``make_arrival_process``-compatible, so a fit can be
+replayed as synthetic load, drive the wall-clock
+:class:`~repro.serving.adaptive.driver.TrafficDriver`, or arm the
+forecast hook of
+:class:`~repro.serving.adaptive.admission.PredictiveAdmissionController`.
+
+```python
+import numpy as np
+from repro.serving.traffic import make_arrival_process
+from repro.serving.adaptive import fit_report
+
+true = make_arrival_process("poisson", rate=80.0)
+offsets = true.sample(np.random.default_rng(0), n=2000)
+report = fit_report(offsets)
+assert report["best"] == "poisson"
+assert abs(report["fits"]["poisson"]["rate"] - 80.0) / 80.0 < 0.1
+```
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+
+__all__ = ["extract_offsets", "fit_poisson", "fit_mmpp", "fit_diurnal",
+           "fit_flash_crowd", "fit_report", "fit_arrival_process"]
+
+#: minimum arrivals before any fit is meaningful
+MIN_ARRIVALS = 8
+
+#: record kinds that mark an arrival (trace events + journal submissions)
+_ARRIVAL_KINDS = ("EVENT", "SUBMIT")
+
+
+# ---------------------------------------------------------------------------
+# offset extraction — one reader for every arrival record the repo produces
+# ---------------------------------------------------------------------------
+
+def extract_offsets(source) -> np.ndarray:
+    """Sorted arrival offsets from any arrival record the repo produces.
+
+    Accepts an array/list of floats, ``ServiceMetrics.per_request`` rows,
+    ``TraceEvent``/``Record`` lists, a trace/journal JSONL path, or a
+    journal *directory* (every ``wal-*.jsonl`` segment is scanned;
+    only ``EVENT``/``SUBMIT`` records count as arrivals).
+    """
+    if isinstance(source, (str, os.PathLike)):
+        path = os.fspath(source)
+        if os.path.isdir(path):
+            offs = []
+            for seg in sorted(os.listdir(path)):
+                if seg.startswith("wal-") and seg.endswith(".jsonl"):
+                    offs.append(extract_offsets(os.path.join(path, seg)))
+            if not offs:
+                raise ValueError(f"no wal-*.jsonl segments under {path!r}")
+            return np.sort(np.concatenate(offs))
+        offs = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                d = json.loads(line)
+                if d.get("type") == "header":
+                    continue
+                if d.get("kind", "EVENT") in _ARRIVAL_KINDS:
+                    offs.append(float(d["offset"]))
+        return np.sort(np.asarray(offs, float))
+    out = []
+    for item in source:
+        if isinstance(item, dict):              # per_request rows
+            out.append(float(item.get("offset", item.get("arrival"))))
+        elif hasattr(item, "offset"):           # TraceEvent / Record
+            if getattr(item, "kind", "EVENT") in _ARRIVAL_KINDS:
+                out.append(float(item.offset))
+        else:                                   # plain offsets
+            out.append(float(item))
+    return np.sort(np.asarray(out, float))
+
+
+def _check(offsets) -> np.ndarray:
+    offsets = extract_offsets(offsets)
+    if len(offsets) < MIN_ARRIVALS:
+        raise ValueError(f"need >= {MIN_ARRIVALS} arrivals to fit, "
+                         f"got {len(offsets)}")
+    if offsets[-1] - offsets[0] <= 0:
+        raise ValueError("arrivals span zero time — cannot fit a rate")
+    return offsets
+
+
+def _windowed(offsets: np.ndarray, window: float = None):
+    """(rates, window_starts, window) — arrival counts per fixed window.
+
+    Default window targets ~8 arrivals per window so burst segmentation
+    sees state dwell times, not single-arrival shot noise.
+    """
+    span = offsets[-1] - offsets[0]
+    if window is None:
+        window = span / max(len(offsets) // 8, 4)
+    n_win = max(int(math.ceil(span / window)), 1)
+    edges = offsets[0] + window * np.arange(n_win + 1)
+    counts, _ = np.histogram(offsets, bins=edges)
+    return counts / window, edges[:-1], window
+
+
+# ---------------------------------------------------------------------------
+# per-kind fitters
+# ---------------------------------------------------------------------------
+
+def fit_poisson(offsets) -> dict:
+    """Method of moments on inter-arrival gaps: conditioning on the first
+    arrival, the MLE of a homogeneous rate is (n-1)/span."""
+    offsets = _check(offsets)
+    span = offsets[-1] - offsets[0]
+    return {"kind": "poisson", "rate": float((len(offsets) - 1) / span)}
+
+
+def _two_means(rates: np.ndarray, iters: int = 32):
+    """Two-cluster 1-D segmentation (Lloyd's): (labels, lo, hi)."""
+    lo, hi = float(rates.min()), float(rates.max())
+    labels = np.zeros(len(rates), bool)
+    for _ in range(iters):
+        thr = 0.5 * (lo + hi)
+        new = rates >= thr
+        if not new.any() or new.all():
+            break
+        nlo = float(rates[~new].mean())
+        nhi = float(rates[new].mean())
+        if (new == labels).all() and nlo == lo and nhi == hi:
+            break
+        labels, lo, hi = new, nlo, nhi
+    return labels, lo, hi
+
+
+def _mmpp_segment(offsets, window=None):
+    """(labels, rates, window) — on/off burst segmentation of windowed
+    rates (the state path the MMPP fit and its likelihood score share)."""
+    rates, _starts, w = _windowed(offsets, window)
+    labels, _, _ = _two_means(rates)
+    return labels, rates, w
+
+
+def fit_mmpp(offsets, window: float = None) -> dict:
+    """On/off burst segmentation: two-means clustering of windowed rates
+    into a quiet and a burst state; per-state rates are the mean windowed
+    rate, dwell means the mean contiguous run length per state."""
+    offsets = _check(offsets)
+    labels, rates, w = _mmpp_segment(offsets, window)
+    if labels.any() and not labels.all():
+        rate_on = float(rates[labels].mean())
+        rate_off = float(rates[~labels].mean())
+    else:
+        # one state only — degenerate to Poisson-at-one-rate
+        rate_on = rate_off = float(rates.mean())
+    runs_on, runs_off, cur, state = [], [], 0, bool(labels[0])
+    for lab in labels:
+        if bool(lab) == state:
+            cur += 1
+        else:
+            (runs_on if state else runs_off).append(cur)
+            cur, state = 1, bool(lab)
+    (runs_on if state else runs_off).append(cur)
+    mean_on = float(np.mean(runs_on)) * w if runs_on else w
+    mean_off = float(np.mean(runs_off)) * w if runs_off else w
+    return {"kind": "mmpp", "rate_on": rate_on, "rate_off": rate_off,
+            "mean_on": mean_on, "mean_off": mean_off}
+
+
+def _rayleigh(offsets: np.ndarray, period: float) -> float:
+    """Rayleigh statistic |sum exp(2*pi*i*t/P)| / n: the phase coherence
+    of the arrivals at candidate period P (peaks at the true period of a
+    sinusoidally modulated Poisson process)."""
+    ph = 2.0 * np.pi * offsets / period
+    return float(np.hypot(np.cos(ph).sum(), np.sin(ph).sum())
+                 / len(offsets))
+
+
+def fit_diurnal(offsets, periods=None) -> dict:
+    """Harmonic regression at the Rayleigh-scored period.
+
+    The generator's rate is ``m - a*cos(2*pi*t/period)`` with the trough
+    at t = 0 (``m = (base+peak)/2``, ``a = (peak-base)/2``) — the phase
+    convention every :class:`DiurnalArrivals` trace starts from.  The
+    period maximizes the Rayleigh statistic over a coarse-then-refined
+    grid; the amplitude follows from the harmonic moment
+    ``E[sum cos(2*pi*t_j/P)] = -a * span / 2``.
+    """
+    offsets = _check(offsets)
+    span = offsets[-1] - offsets[0]
+    if periods is None:
+        # need >= ~1.5 observed cycles for the period to be identifiable
+        periods = np.geomspace(span / 40.0, span / 1.5, 160)
+    scores = [_rayleigh(offsets, p) for p in periods]
+    best = float(periods[int(np.argmax(scores))])
+    # local refinement around the coarse winner
+    fine = np.linspace(best * 0.85, best * 1.15, 121)
+    best = float(fine[int(np.argmax([_rayleigh(offsets, p) for p in fine]))])
+    m = len(offsets) / span
+    a = -2.0 / span * float(np.cos(2.0 * np.pi * offsets / best).sum())
+    a = min(max(a, 0.0), m)           # rates stay >= 0
+    return {"kind": "diurnal", "base_rate": float(m - a),
+            "peak_rate": float(m + a), "period": best}
+
+
+def fit_flash_crowd(offsets, window: float = None) -> dict:
+    """Spike segmentation: base rate from the windows outside the widest
+    significantly-elevated contiguous run, spike rate/extent from the run
+    containing the peak window."""
+    offsets = _check(offsets)
+    rates, starts, w = _windowed(offsets, window)
+    base = float(np.median(rates))
+    # significance: beyond Poisson counting noise at the base rate
+    thresh = max(2.0 * base, base + 3.0 * math.sqrt(max(base / w, 1e-12)))
+    hot = rates > thresh
+    if not hot.any():
+        return {"kind": "flash-crowd", "base_rate": base,
+                "spike_rate": base, "spike_at": float(offsets[-1]),
+                "spike_len": 0.0}
+    peak = int(np.argmax(rates))
+    lo = peak
+    while lo > 0 and hot[lo - 1]:
+        lo -= 1
+    hi = peak
+    while hi + 1 < len(hot) and hot[hi + 1]:
+        hi += 1
+    cold = np.concatenate([rates[:lo], rates[hi + 1:]])
+    return {"kind": "flash-crowd",
+            "base_rate": float(cold.mean()) if len(cold) else base,
+            "spike_rate": float(rates[lo:hi + 1].mean()),
+            "spike_at": float(starts[lo]),
+            "spike_len": float(w * (hi - lo + 1))}
+
+
+# ---------------------------------------------------------------------------
+# model scoring — which kind best explains the trace
+# ---------------------------------------------------------------------------
+
+#: free parameters per kind (the BIC complexity penalty); MMPP adds one
+#: per transition of its fitted label path — the segmentation is itself
+#: estimated from the scored counts, so each changepoint is a parameter
+#: (otherwise two-means clustering of plain Poisson noise always "wins")
+_N_PARAMS = {"poisson": 1, "mmpp": 4, "diurnal": 3, "flash-crowd": 4}
+
+
+def _window_rates_for(kind: str, fit: dict, starts, w, labels):
+    """Predicted per-window rate under a fitted kind."""
+    mid = starts + 0.5 * w
+    if kind == "poisson":
+        return np.full(len(starts), fit["rate"])
+    if kind == "mmpp":
+        return np.where(labels, fit["rate_on"], fit["rate_off"])
+    from repro.serving.traffic.generators import make_arrival_process
+    proc = make_arrival_process(**fit)
+    return np.asarray([proc.rate_at(t) for t in mid])
+
+
+def _loglik(counts: np.ndarray, rates: np.ndarray, w: float) -> float:
+    """Windowed Poisson log-likelihood sum(k ln(r w) - r w) (the k!
+    term is model-independent and cancels in comparisons)."""
+    mu = np.maximum(rates * w, 1e-12)
+    return float((counts * np.log(mu) - mu).sum())
+
+
+def fit_report(offsets, window: float = None) -> dict:
+    """Fit every arrival kind and score which best explains the trace.
+
+    Scores are BIC-penalized windowed Poisson log-likelihoods
+    (``ll - 0.5 * n_params * ln(n_windows)``); ``best`` names the
+    highest-scoring kind and ``fits[best]`` rebuilds it through
+    ``make_arrival_process``.
+    """
+    offsets = _check(offsets)
+    rates, starts, w = _windowed(offsets, window)
+    counts = rates * w
+    labels, _, _ = _two_means(rates)
+    fits = {"poisson": fit_poisson(offsets),
+            "mmpp": fit_mmpp(offsets, window),
+            "diurnal": fit_diurnal(offsets),
+            "flash-crowd": fit_flash_crowd(offsets, window)}
+    scores = {}
+    n_trans = int(np.count_nonzero(labels[1:] != labels[:-1]))
+    for kind, fit in fits.items():
+        k = _N_PARAMS[kind] + (n_trans if kind == "mmpp" else 0)
+        pred = _window_rates_for(kind, fit, starts, w, labels)
+        scores[kind] = (_loglik(counts, pred, w)
+                        - 0.5 * k * math.log(len(starts)))
+    best = max(scores, key=scores.get)
+    return {"n_arrivals": int(len(offsets)),
+            "span": float(offsets[-1] - offsets[0]),
+            "window": float(w), "best": best,
+            "fits": fits, "scores": {k: round(v, 3)
+                                     for k, v in scores.items()}}
+
+
+def fit_arrival_process(offsets, window: float = None):
+    """The best-scoring fitted :class:`ArrivalProcess` for a trace."""
+    from repro.serving.traffic.generators import make_arrival_process
+    report = fit_report(offsets, window)
+    return make_arrival_process(**report["fits"][report["best"]])

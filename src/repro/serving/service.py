@@ -113,7 +113,11 @@ class ServeSpec:
       ``max_batch``/``charge_formation`` keys still apply.
 
     ``admission``: ``{"mode": "reject"|"depth_cap", "headroom": 1.0}``
-    (empty dict = no admission control).  ``slo_classes``: name ->
+    (empty dict = no admission control); an optional ``forecast`` key
+    (``{"process": {"kind": ...}, "horizon": ..., "margin": ...,
+    "capacity": ...}``) arms the predictive controller
+    (``repro.serving.adaptive``): a fitted arrival process tightens depth
+    caps / rejects ahead of a forecast burst.  ``slo_classes``: name ->
     ``{rel_deadline, utility_weight, depth_cap}``.
 
     Full field reference: ``docs/serving-api.md`` (kept in sync by the
@@ -210,6 +214,19 @@ class ServeSpec:
         if mode is not None and mode not in ("off", "reject", "depth_cap"):
             raise ValueError(f"admission mode {mode!r} not in "
                              "('off', 'reject', 'depth_cap')")
+        forecast = self.admission.get("forecast")
+        if forecast is not None:
+            proc = forecast.get("process") if isinstance(forecast, dict) \
+                else None
+            if not isinstance(proc, dict) or "kind" not in proc:
+                raise ValueError(
+                    "admission forecast needs {'process': {'kind': ..., "
+                    "...arrival args}} (a make_arrival_process dict)")
+            from repro.serving.traffic.generators import ARRIVAL_KINDS
+            if proc["kind"] not in ARRIVAL_KINDS:
+                raise ValueError(
+                    f"forecast process kind {proc['kind']!r} not in "
+                    f"{sorted(ARRIVAL_KINDS)}")
         for name, d in self.slo_classes.items():
             c = SLOClass.from_dict(name, d)
             if c.rel_deadline is not None and c.rel_deadline <= 0:
@@ -1015,16 +1032,24 @@ class Service:
             # batcher, admission, §II-B deadline adjustment — prices with it
             tm = ctx.time_model
         admission = self.resources.get("admission")
-        if admission is None and spec.admission.get("mode") not in (None,
-                                                                    "off"):
+        if admission is None \
+                and (spec.admission.get("mode") not in (None, "off")
+                     or spec.admission.get("forecast")):
             cls = AdmissionController
             if self.zoo is not None:
                 # price each request against its own model's tables
                 from repro.serving.zoo import ZooAdmissionController
                 cls = ZooAdmissionController
-            admission = cls(
-                tm, mode=spec.admission["mode"],
-                headroom=float(spec.admission.get("headroom", 1.0)))
+            if spec.admission.get("forecast"):
+                # predictive variant: a fitted arrival process tightens
+                # caps / rejects ahead of the forecast burst
+                from repro.serving.adaptive import predictive_admission
+                admission = predictive_admission(tm, spec.admission,
+                                                 base_cls=cls)
+            else:
+                admission = cls(
+                    tm, mode=spec.admission["mode"],
+                    headroom=float(spec.admission.get("headroom", 1.0)))
         eff_mb = min(max_batch or tm.max_batch, tm.max_batch)
         ctx.task_factory = self._make_task_factory(executor, tm, eff_mb)
         ctx.stream = stream

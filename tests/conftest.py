@@ -8,7 +8,31 @@ jax.config.update("jax_enable_x64", False)
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: long-running subprocess tests")
+        "markers", "slow: long-running tests (subprocesses, jax compiles)")
+    config.addinivalue_line(
+        "markers", "wallclock: real-time tests (threads, sleeps, live "
+        "clocks) — the deflake CI leg repeats these 20x")
+
+
+def pytest_addoption(parser):
+    # minimal stand-in for pytest-repeat's --count when the plugin is
+    # absent; when pytest-repeat IS installed (CI) its own option wins
+    # and this registration raises ValueError — ignore it.
+    try:
+        parser.addoption("--count", action="store", default=1, type=int,
+                         help="run each test N times (pytest-repeat "
+                              "fallback)")
+    except ValueError:
+        pass
+
+
+def pytest_generate_tests(metafunc):
+    count = int(metafunc.config.getoption("--count", 1) or 1)
+    if count > 1 and "__repeat__" not in metafunc.fixturenames \
+            and not metafunc.config.pluginmanager.hasplugin("pytest_repeat"):
+        metafunc.fixturenames.append("__repeat__")
+        metafunc.parametrize("__repeat__", range(count),
+                             ids=[f"rep{i}" for i in range(count)])
 
 # hypothesis is an optional dependency: when absent, install a stub so the
 # property-test modules still *collect* — @given tests turn into skips and
@@ -36,6 +60,21 @@ except ImportError:
     _hyp.settings = _settings
     _hyp.strategies = _Strategies()
     sys.modules["hypothesis"] = _hyp
+
+
+def wait_until(predicate, timeout=10.0, interval=0.005, desc="condition"):
+    """Bounded polling for wall-clock tests: spin on ``predicate`` until it
+    returns truthy or ``timeout`` elapses (then fail loudly).  Replaces
+    bare ``time.sleep(...)`` synchronization, which is the classic flake:
+    too short on a loaded CI box, dead time everywhere else."""
+    import time
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        v = predicate()
+        if v:
+            return v
+        time.sleep(interval)
+    raise AssertionError(f"timed out after {timeout}s waiting for {desc}")
 
 
 @pytest.fixture(scope="session")

@@ -443,6 +443,7 @@ def test_trace_spans_off_keeps_time_splits():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
+@pytest.mark.wallclock
 def test_wall_clock_device_batched_obs_smoke():
     import jax
     from repro.configs import get_config

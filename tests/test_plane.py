@@ -338,6 +338,7 @@ def test_recovery_through_frontdoor_keeps_discipline(tmp_path):
 
 
 @pytest.mark.slow
+@pytest.mark.wallclock
 def test_crash_recovery_kill9_subprocess(tmp_path):
     """Real crash: a wall-clock live run is SIGKILLed mid-stream; the
     journal alone must recover the rest — every request delivered exactly
@@ -546,6 +547,7 @@ class _BoomExecutor:
         raise RuntimeError("boom")
 
 
+@pytest.mark.wallclock
 def test_close_survives_raising_executor_wall_clock():
     from repro.serving.batch import BatchTimeModel
     conf, correct = oracle_tables()

@@ -275,6 +275,8 @@ def test_pipelined_noop_without_host_cost():
 # wall-clock engines through the runtime (real model, real stage fns)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow                    # jax compile dominates; no 20x repeat
+@pytest.mark.wallclock
 @pytest.mark.parametrize("pipelined", [False, True])
 def test_wall_clock_batched_engine_serves_all(pipelined):
     import jax

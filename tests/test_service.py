@@ -235,6 +235,7 @@ def test_run_refuses_live_source_and_submit_refuses_batch_source():
 # wall-clock live mode (background engine thread, oracle executor)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.wallclock
 def test_live_wall_clock_service_serves_submissions():
     conf, correct = oracle_tables()
     spec = ServeSpec(
@@ -255,6 +256,7 @@ def test_live_wall_clock_service_serves_submissions():
     assert met.makespan > 0.0
 
 
+@pytest.mark.wallclock
 def test_live_engine_failure_fans_out_to_handles():
     """An engine-thread crash must not strand result() waiters: every
     outstanding handle unblocks with the error, and drain() re-raises."""

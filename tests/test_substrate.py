@@ -154,6 +154,8 @@ def test_train_decreases_loss(rng):
 # serving engine (wall clock, real stage fns)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow                    # jax compile dominates; no 20x repeat
+@pytest.mark.wallclock
 def test_serving_engine_end_to_end(rng):
     from repro.serving import (ServeSpec, Service, closed_loop_stream,
                                make_stage_fns, profile_stages)
@@ -188,6 +190,8 @@ def test_serving_engine_end_to_end(rng):
         assert 0.0 <= r.confidence <= 1.0
 
 
+@pytest.mark.slow                    # jax compile dominates; no 20x repeat
+@pytest.mark.wallclock
 def test_serving_engine_tight_deadlines_shed_stages(rng):
     from repro.serving import (ServeSpec, Service, closed_loop_stream,
                                make_stage_fns, profile_stages)

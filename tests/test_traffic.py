@@ -387,6 +387,7 @@ def test_streaming_requires_positive_interval():
 # live-mode cancellation after admission (satellite)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.wallclock
 def test_cancel_after_admission_sheds_optional_stages():
     conf, correct = oracle_tables()
     spec = ServeSpec(
